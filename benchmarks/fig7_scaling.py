@@ -1,0 +1,45 @@
+"""Paper Fig. 7: strong scaling, 2 -> 128 processes.
+
+Wall-clock on real hardware is not available in this container, so this
+benchmark reports the two-tier α-β MODEL time (comm volumes are exact,
+bandwidths are TSUBAME4.0's: NVLink 450 GB/s, IB 25 GB/s per node of 4).
+The paper's qualitative claims this reproduces:
+  * baselines (block/col/row) stop scaling at ~8 GPUs;
+  * joint + hierarchical keeps scaling to 128;
+  * mawi-like matrices show the largest gap.
+"""
+from __future__ import annotations
+
+from repro.core.comm_model import TSUBAME_LIKE, modeled_time, modeled_time_hier
+from repro.core.hierarchy import build_hier_plan
+from repro.core.planner import build_plan
+
+from .common import DATASETS, fmt_row, time_call
+
+N_DENSE = 32
+PROCS = [2, 4, 8, 16, 32, 64, 128]
+
+
+def run() -> list:
+    rows = []
+    for ds in ("social-pl", "mawi-hub", "mesh-band"):
+        a = DATASETS[ds](0)
+        for p in PROCS:
+            if a.shape[0] % p:
+                continue
+            entry = {}
+            for strat in ("block", "col", "joint"):
+                plan = build_plan(a, p, strat)
+                entry[strat] = modeled_time(plan, N_DENSE, TSUBAME_LIKE)
+            plan = build_plan(a, p, "joint")
+            g = max(p // TSUBAME_LIKE.group_size, 1)
+            if p % g == 0 and p // g >= 1 and p > g:
+                hier = build_hier_plan(plan, g, p // g)
+                entry["shiro"] = modeled_time_hier(hier, N_DENSE, TSUBAME_LIKE)
+            else:
+                entry["shiro"] = entry["joint"]
+            derived = ";".join(f"{k}={v * 1e6:.1f}us" for k, v in entry.items())
+            best = min(entry, key=entry.get)
+            rows.append(fmt_row(f"fig7/{ds}/p{p}", entry["shiro"] * 1e6,
+                                derived + f";best={best}"))
+    return rows

@@ -1,0 +1,33 @@
+"""Paper Fig. 9: inter-process communication balance before/after joint.
+
+Heatmaps become summary stats here: max pair volume, imbalance ratio
+(max/mean), and the symmetry score (1 = perfectly symmetric pattern).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.comm_model import balance_stats
+from repro.core.planner import build_plan
+from repro.core.sparse import csr_from_dense
+
+from .common import DATASETS, fmt_row, time_call
+
+P = 16
+
+
+def run() -> list:
+    rows = []
+    for ds in ("mesh-band", "mawi-hub", "web-pl"):
+        a = DATASETS[ds](0)
+        # symmetrize (paper: del24/mawi are symmetric undirected graphs)
+        d = a.to_dense()
+        a = csr_from_dense(np.maximum(d, d.T))
+        us = time_call(build_plan, a, P, "joint", warmup=0, iters=1)
+        for strat in ("col", "joint"):
+            st = balance_stats(build_plan(a, P, strat))
+            rows.append(fmt_row(
+                f"fig9/{ds}/{strat}", us if strat == "joint" else 0.0,
+                f"max={st['max']:.0f};imbalance={st['imbalance']:.2f};"
+                f"symmetry={st['symmetry']:.3f}"))
+    return rows

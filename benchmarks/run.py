@@ -1,0 +1,45 @@
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Figures covered:
+  Fig. 5  pattern-dependent reduction      (fig5_patterns)
+  Fig. 7  strong scaling 2->128 procs      (fig7_scaling, modeled)
+  Fig. 8  volume reductions (joint, hier)  (fig8_volume)
+  Fig. 9  communication balance            (fig9_balance)
+  Fig. 10 step-wise ablation, MEASURED     (fig10_ablation)
+  Fig. 11 dense-column sensitivity         (fig11_ncols)
+  Tab. 3  GNN case study + prep overhead   (table3_gnn)
+  extra   SHIRO MoE dispatch (beyond-paper) (moe_dispatch)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fig5_patterns, fig7_scaling, fig8_volume, fig9_balance,
+                   fig10_ablation, fig11_ncols, table3_gnn, moe_dispatch)
+    modules = [fig5_patterns, fig7_scaling, fig8_volume, fig9_balance,
+               fig10_ablation, fig11_ncols, table3_gnn, moe_dispatch]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in modules:
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+            if hasattr(mod, "run_group_aware"):
+                for row in mod.run_group_aware():
+                    print(row, flush=True)
+        except Exception:
+            failed += 1
+            print(f"{mod.__name__},nan,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end GNN training on SHIRO distributed SpMM (paper §7.6 / Tab. 3).
+
+    PYTHONPATH=src python examples/gnn_training.py [--epochs 200]
+
+Trains a full-batch 2-layer GCN (~100k-1M edges scale on this container)
+with the adjacency SpMM running through the SHIRO joint plan on an
+8-device mesh, reporting per-epoch time, MWVC preprocessing overhead and
+its ratio — the Table-3 protocol.
+"""
+import argparse
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_plan, flat_exec_arrays, flat_spmm, power_law_sparse
+from repro.launch.mesh import make_spmm_mesh
+from repro.models.gnn import GCN, gcn_forward, gcn_loss, normalize_adjacency
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=200)
+    ap.add_argument("--nodes", type=int, default=2048)
+    ap.add_argument("--edges", type=int, default=65536)
+    ap.add_argument("--procs", type=int, default=8)
+    args = ap.parse_args()
+
+    print(f"graph: {args.nodes} nodes, ~{args.edges} edges, P={args.procs}")
+    adj = normalize_adjacency(
+        power_law_sparse(args.nodes, args.nodes, args.edges, 1.4, 0))
+
+    t0 = time.perf_counter()
+    plan = build_plan(adj, args.procs, "joint")
+    prep_s = time.perf_counter() - t0
+    vols_col = build_plan(adj, args.procs, "col").volume_rows()
+    print(f"MWVC preprocessing: {prep_s:.2f}s; volume rows "
+          f"{vols_col} (col) -> {plan.volume_rows()} (joint, "
+          f"-{100 * (1 - plan.volume_rows() / max(vols_col, 1)):.1f}%)")
+
+    ex = flat_exec_arrays(plan)
+    mesh = make_spmm_mesh(args.procs)
+    spmm = lambda h: flat_spmm(ex, h, mesh)
+
+    gcn = GCN(args.nodes, 64, 128, 16)
+    params = gcn.init(jax.random.PRNGKey(0))
+    feats = jax.random.normal(jax.random.PRNGKey(1), (args.nodes, 64))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (args.nodes,), 0, 16)
+    opt_cfg = AdamWConfig(lr=5e-3, weight_decay=0.0, warmup_steps=10,
+                          total_steps=args.epochs)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(gcn_loss)(p, feats, labels, spmm)
+        p2, o2, _ = adamw_update(opt_cfg, p, g, o)
+        return p2, o2, loss
+
+    params, opt, loss = step(params, opt)  # compile
+    jax.block_until_ready(loss)
+    t0 = time.perf_counter()
+    for ep in range(args.epochs):
+        params, opt, loss = step(params, opt)
+        if ep % max(args.epochs // 10, 1) == 0:
+            print(f"  epoch {ep:4d}  loss {float(loss):.4f}")
+    jax.block_until_ready(loss)
+    train_s = time.perf_counter() - t0
+    acc = float(jnp.mean(jnp.argmax(
+        gcn_forward(params, feats, spmm), -1) == labels))
+    ratio = prep_s / (prep_s + train_s) * 100
+    print(f"training: {train_s:.2f}s ({train_s / args.epochs * 1e3:.1f}ms/"
+          f"epoch); final loss {float(loss):.4f}; train acc {acc:.3f}")
+    print(f"prep ratio (Tab. 3 protocol): {ratio:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

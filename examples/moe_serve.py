@@ -1,0 +1,83 @@
+"""Batched serving of a MoE LM with SHIRO-planned expert dispatch.
+
+    PYTHONPATH=src python examples/moe_serve.py [--tokens 32] [--batch 8]
+
+Prefills a batch of prompts, then decodes tokens step by step through the
+expert-parallel MoE path (shard_map over the model axis) with SHIRO's
+dedup + pre-aggregated combine. Reports tokens/s and the dispatch-row
+savings vs classic per-assignment exchange.
+"""
+import argparse
+import dataclasses
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.distributed.context import DistContext
+from repro.launch.mesh import make_mesh
+from repro.models.moe import moe_comm_rows
+from repro.models.transformer import (
+    decode_step, forward, init_decode_cache, init_params,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("olmoe-1b-7b")
+    cfg = dataclasses.replace(cfg, capacity_factor=4.0)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    dist = DistContext(mesh=mesh, batch_axes=("data",), model_axis="model")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    classic, shiro = moe_comm_rows(cfg, tokens=args.batch * args.prompt_len,
+                                   M=dist.model_size)
+    print(f"model: {cfg.name} ({cfg.n_experts} experts, top-{cfg.top_k}); "
+          f"mesh {dict(mesh.shape)}")
+    print(f"SHIRO dispatch rows: {shiro} vs classic {classic} "
+          f"(-{100 * (1 - shiro / classic):.1f}%)")
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                       (args.batch, args.prompt_len)))
+
+    # prefill: forward pass over the prompts (teacher-forced logits)
+    prefill = jax.jit(lambda p, t: forward(p, cfg, dist, {"tokens": t}))
+    logits = prefill(params, prompts)
+    jax.block_until_ready(logits)
+    print(f"prefill OK: logits {logits.shape}")
+
+    # decode loop: feed prompts token-by-token, then sample greedily
+    step = jax.jit(lambda p, t, c: decode_step(p, cfg, dist, t, c))
+    cache = init_decode_cache(cfg, args.batch,
+                              args.prompt_len + args.tokens + 1)
+    for i in range(args.prompt_len):
+        lg, cache = step(params, prompts[:, i:i + 1], cache)
+    tok = jnp.argmax(lg[:, -1:], -1)
+    out_tokens = [tok]
+    t0 = time.perf_counter()
+    for _ in range(args.tokens):
+        lg, cache = step(params, tok, cache)
+        tok = jnp.argmax(lg[:, -1:], -1)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    total = args.tokens * args.batch
+    print(f"decoded {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s on 8 host devices)")
+    seq = np.asarray(jnp.concatenate(out_tokens, 1))
+    print(f"first sampled sequence: {seq[0][:16].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: SHIRO distributed SpMM in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a power-law sparse matrix, plans communication with every strategy
+(paper Fig. 1), executes the joint plan distributed over 8 host devices,
+and verifies against the dense product.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    build_hier_plan, build_plan, flat_exec_arrays, flat_spmm,
+    hier_exec_arrays, hier_spmm, power_law_sparse, strategy_volumes,
+)
+from repro.launch.mesh import make_spmm_mesh
+
+
+def main() -> None:
+    P, N = 8, 32
+    a = power_law_sparse(512, 512, 8192, 1.4, seed=0)
+    b = np.random.default_rng(0).standard_normal((512, N)).astype(np.float32)
+
+    vols = strategy_volumes(a, P, N)
+    print("communication bytes by strategy (paper Eqs. 1-3, 9):")
+    for k in ("block", "col", "row", "joint"):
+        print(f"  {k:6s} {vols[k]:>12,}")
+    print(f"  joint reduction vs best single: "
+          f"{100 * (1 - vols['joint'] / min(vols['col'], vols['row'])):.1f}%")
+
+    # flat joint execution (paper §5)
+    plan = build_plan(a, P, "joint")
+    out = flat_spmm(flat_exec_arrays(plan), jnp.asarray(b), make_spmm_mesh(P))
+    np.testing.assert_allclose(np.asarray(out), a.to_dense() @ b,
+                               rtol=2e-3, atol=2e-3)
+    print("flat joint SpMM == dense reference  ✓")
+
+    # hierarchical execution (paper §6): 2 groups ("pods") x 4 locals
+    hier = build_hier_plan(plan, G=2, L=4)
+    out2 = hier_spmm(hier_exec_arrays(hier), jnp.asarray(b),
+                     make_spmm_mesh(P, groups=2))
+    np.testing.assert_allclose(np.asarray(out2), a.to_dense() @ b,
+                               rtol=2e-3, atol=2e-3)
+    b_h, c_h = hier.inter_group_rows()
+    b_f, c_f = hier.inter_group_rows_flat()
+    print(f"hierarchical SpMM == dense reference  ✓")
+    print(f"inter-group rows: flat {b_f + c_f} -> hierarchical {b_h + c_h} "
+          f"({100 * (1 - (b_h + c_h) / max(b_f + c_f, 1)):.1f}% reduction)")
+
+
+if __name__ == "__main__":
+    main()

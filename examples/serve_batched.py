@@ -1,0 +1,52 @@
+"""Batched request serving through the wave scheduler.
+
+    PYTHONPATH=src python examples/serve_batched.py [--requests 12]
+
+Streams a queue of prompts with varying token budgets through
+``ContinuousBatcher`` (slot-packed waves over one jit-compiled decode
+step) and reports throughput + slot occupancy.
+"""
+import argparse
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import init_params
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("qwen2-1.5b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batcher = ContinuousBatcher(cfg, params, max_batch=args.slots,
+                                max_len=64)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        batcher.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                rng.integers(3, 9)).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, args.max_new + 1))))
+
+    t0 = time.perf_counter()
+    stats = batcher.run()
+    dt = time.perf_counter() - t0
+    print(f"served {stats.served} requests, {stats.generated_tokens} tokens "
+          f"in {dt:.2f}s ({stats.generated_tokens / dt:.1f} tok/s)")
+    print(f"decode steps: {stats.decode_steps}; "
+          f"mean slot occupancy {stats.mean_occupancy:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dryrun JSONL records. §Perf is maintained by hand (hypothesis log).
+
+    python scripts/make_experiments.py results/dryrun_single.jsonl \
+        results/dryrun_multi.jsonl > results/experiments_tables.md
+"""
+import json
+import sys
+
+
+def load(path):
+    recs = []
+    try:
+        with open(path) as f:
+            for line in f:
+                if line.strip():
+                    recs.append(json.loads(line))
+    except FileNotFoundError:
+        pass
+    # de-dup (arch, shape, mesh) keeping last
+    out = {}
+    for r in recs:
+        out[(r["arch"], r["shape"], r.get("mesh"))] = r
+    return list(out.values())
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_t(x):
+    if x is None:
+        return "-"
+    if x < 1e-3:
+        return f"{x * 1e6:.1f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def dryrun_table(recs, mesh):
+    rows = ["| arch | shape | mode | status | compile | bytes/dev (args) "
+            "| HLO flops/chip | coll bytes/chip |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh:
+            continue
+        mem = r.get("memory", {})
+        cost = r.get("cost", {})
+        coll = r.get("collectives", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('mode', '-')} "
+            f"| {r['status']} | {r.get('compile_s', '-')}s "
+            f"| {fmt_bytes(mem.get('argument_size_in_bytes'))} "
+            f"| {cost.get('flops', 0):.3g} "
+            f"| {fmt_bytes(coll.get('total'))} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | compute | memory | collective | bottleneck "
+            "| MODEL_FLOPS | useful ratio | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != "16x16" or r["status"] != "run":
+            continue
+        rc = r.get("roofline_corrected") or r.get("roofline") or {}
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(rc.get('compute'))} "
+            f"| {fmt_t(rc.get('memory'))} | {fmt_t(rc.get('collective'))} "
+            f"| {rc.get('bottleneck', '-')} "
+            f"| {rc.get('model_flops', 0):.3g} "
+            f"| {rc.get('useful_flops_ratio', 0):.3f} "
+            f"| {rc.get('roofline_fraction', 0):.4f} |")
+    return "\n".join(rows)
+
+
+def main():
+    recs = []
+    for p in sys.argv[1:]:
+        recs += load(p)
+    # global de-dup across files: later files override earlier ones
+    merged = {}
+    for r in recs:
+        merged[(r["arch"], r["shape"], r.get("mesh"))] = r
+    recs = list(merged.values())
+    print("## §Dry-run — single-pod mesh (16×16 = 256 chips)\n")
+    print(dryrun_table(recs, "16x16"))
+    print("\n## §Dry-run — multi-pod mesh (2×16×16 = 512 chips)\n")
+    print(dryrun_table(recs, "2x16x16"))
+    print("\n## §Roofline — per-cell terms (single-pod, probe-corrected)\n")
+    print(roofline_table(recs))
+    fails = [r for r in recs if str(r.get("status", "")).startswith("FAIL")]
+    print(f"\nFAILED cells: {len(fails)}")
+    for r in fails:
+        print(f"  - {r['arch']} {r['shape']} {r.get('mesh')}: "
+              f"{r.get('error', '')[:200]}")
+
+
+if __name__ == "__main__":
+    main()

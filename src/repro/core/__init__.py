@@ -1,0 +1,42 @@
+"""SHIRO core: sparsity-aware + hierarchical communication for distributed SpMM.
+
+Public API:
+  sparse containers  — CSRMatrix, COOMatrix, BSRMatrix + generators
+  exact covers       — min_vertex_cover_{unweighted,weighted} (König / Dinic)
+  offline planning   — build_plan / build_hier_plan (paper §5-§6 preprocessing)
+  execution          — flat_spmm / hier_spmm (shard_map, jit/lower-clean)
+  analytics          — strategy_volumes, modeled_time, balance_stats
+"""
+from .sparse import (
+    COOMatrix, CSRMatrix, BSRMatrix,
+    coo_from_arrays, csr_from_coo, csr_from_dense, bsr_from_csr,
+    random_sparse, power_law_sparse, hub_sparse, block_rows,
+)
+from .mwvc import (
+    hopcroft_karp, min_vertex_cover_unweighted, min_vertex_cover_weighted,
+    cover_is_valid,
+)
+from .planner import Strategy, PairPlan, SpmmPlan, build_pair_plan, build_plan
+from .hierarchy import HierPlan, build_hier_plan
+from .comm_model import (
+    NetworkSpec, TSUBAME_LIKE, TPU_POD, AURORA_LIKE,
+    strategy_volumes, modeled_time, modeled_time_hier, balance_stats,
+)
+from .dist_spmm import (
+    FlatExecPlan, HierExecPlan, flat_exec_arrays, hier_exec_arrays,
+    flat_spmm, hier_spmm, coo_spmm_local,
+)
+
+__all__ = [
+    "COOMatrix", "CSRMatrix", "BSRMatrix",
+    "coo_from_arrays", "csr_from_coo", "csr_from_dense", "bsr_from_csr",
+    "random_sparse", "power_law_sparse", "hub_sparse", "block_rows",
+    "hopcroft_karp", "min_vertex_cover_unweighted", "min_vertex_cover_weighted",
+    "cover_is_valid",
+    "Strategy", "PairPlan", "SpmmPlan", "build_pair_plan", "build_plan",
+    "HierPlan", "build_hier_plan",
+    "NetworkSpec", "TSUBAME_LIKE", "TPU_POD", "AURORA_LIKE",
+    "strategy_volumes", "modeled_time", "modeled_time_hier", "balance_stats",
+    "FlatExecPlan", "HierExecPlan", "flat_exec_arrays", "hier_exec_arrays",
+    "flat_spmm", "hier_spmm", "coo_spmm_local",
+]

@@ -1,0 +1,376 @@
+"""Distributed SpMM execution in JAX via ``shard_map`` (paper §5-§6).
+
+Two executors over a 1-D row-partitioned ``C = A @ B``:
+
+* ``flat_spmm``      — single-tier all_to_all schedule implementing the
+  planner's strategy ('block' / 'col' / 'row' / 'joint'): paper Fig. 1.
+* ``hier_spmm``      — two-tier (group, local) schedule implementing
+  paper Alg. 1 / Fig. 6(f): inter-group B fetch ∥ intra-group C
+  pre-aggregation, then inter-group C transfer ∥ intra-group B
+  distribution. Collectives live on *disjoint mesh axes* so XLA's
+  latency-hiding scheduler can overlap the complementary stages.
+
+All buffer shapes are static (padded by the offline planner), so both
+executors jit/lower cleanly — the same property the multi-pod dry-run
+relies on.
+
+Device-side sparse pieces are padded COO; the compute itself is a
+gather + segment-scatter (`.at[].add`) which XLA fuses well on CPU/TPU;
+the Pallas BSR kernel (kernels/bsr_spmm.py) is the high-performance
+substitute for the diagonal/local block on real TPUs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .hierarchy import HierPlan
+from .planner import SpmmPlan
+from .sparse import CSRMatrix
+
+__all__ = [
+    "FlatExecPlan",
+    "HierExecPlan",
+    "flat_exec_arrays",
+    "hier_exec_arrays",
+    "flat_spmm",
+    "hier_spmm",
+    "coo_spmm_local",
+]
+
+
+# ---------------------------------------------------------------------------
+# pytrees
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FlatExecPlan:
+    """Stacked per-process device arrays for the flat executor."""
+
+    # diagonal block COO (local rows x local cols)
+    diag_row: jax.Array  # [P, nnzd] int32
+    diag_col: jax.Array
+    diag_val: jax.Array
+    # column-covered off-diag COO; cols index flat recv space P*max_b
+    colp_row: jax.Array  # [P, nnzc]
+    colp_col: jax.Array
+    colp_val: jax.Array
+    # row-covered off-diag COO; rows index flat send space P*max_c
+    rowp_row: jax.Array  # [P, nnzr]
+    rowp_col: jax.Array
+    rowp_val: jax.Array
+    b_send_idx: jax.Array  # [P(src), P(dst), max_b] int32, -1 pad
+    c_recv_rows: jax.Array  # [P(dst), P(src), max_c] int32, -1 pad
+    meta: dict = dataclasses.field(metadata=dict(static=True), default_factory=dict)
+
+    @property
+    def P(self) -> int:
+        return self.meta["P"]
+
+    @property
+    def max_b(self) -> int:
+        return self.meta["max_b"]
+
+    @property
+    def max_c(self) -> int:
+        return self.meta["max_c"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HierExecPlan:
+    """Stacked per-process device arrays for the hierarchical executor.
+
+    All leading [P, ...] arrays are reshaped to [G, L, ...] so they shard
+    over the ('g', 'l') mesh axes.
+    """
+
+    diag_row: jax.Array  # [G, L, nnzd]
+    diag_col: jax.Array
+    diag_val: jax.Array
+    colp_row: jax.Array  # [G, L, nnzc]; cols index [L*G*max_bg] gathered space
+    colp_col: jax.Array
+    colp_val: jax.Array
+    rowp_row: jax.Array  # [G, L, nnzr]; rows index [P*max_cg] group space
+    rowp_col: jax.Array
+    rowp_val: jax.Array
+    b_group_send_idx: jax.Array  # [G, L, G(dst), max_bg]
+    c_recv_rows: jax.Array  # [G(dst), L(dst), G(src), max_cg]
+    meta: dict = dataclasses.field(metadata=dict(static=True), default_factory=dict)
+
+    @property
+    def G(self) -> int:
+        return self.meta["G"]
+
+    @property
+    def L(self) -> int:
+        return self.meta["L"]
+
+    @property
+    def max_bg(self) -> int:
+        return self.meta["max_bg"]
+
+    @property
+    def max_cg(self) -> int:
+        return self.meta["max_cg"]
+
+
+# ---------------------------------------------------------------------------
+# host-side array builders
+# ---------------------------------------------------------------------------
+
+
+def _stack_coo(csrs: List[CSRMatrix]) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-process CSR pieces into padded COO [P, nnz_max] arrays."""
+    coos = [c.to_coo() for c in csrs]
+    nnz = max((c.nnz for c in coos), default=0)
+    nnz = max(nnz, 1)
+    P_ = len(csrs)
+    row = np.zeros((P_, nnz), np.int32)
+    col = np.zeros((P_, nnz), np.int32)
+    val = np.zeros((P_, nnz), np.float32)
+    for i, c in enumerate(coos):
+        row[i, : c.nnz] = c.row
+        col[i, : c.nnz] = c.col
+        val[i, : c.nnz] = c.val
+    return row, col, val
+
+
+def flat_exec_arrays(plan: SpmmPlan) -> FlatExecPlan:
+    """Convert an offline SpmmPlan into stacked device arrays."""
+    m_locals = {b[1] - b[0] for b in plan.bounds}
+    if len(m_locals) != 1:
+        raise ValueError("row blocks must be equal-sized; pad M to P|M first")
+    dr, dc, dv = _stack_coo(plan.a_diag)
+    cr, cc, cv = _stack_coo(plan.a_colpart)
+    rr, rc, rv = _stack_coo(plan.a_rowpart)
+    return FlatExecPlan(
+        diag_row=jnp.asarray(dr), diag_col=jnp.asarray(dc), diag_val=jnp.asarray(dv),
+        colp_row=jnp.asarray(cr), colp_col=jnp.asarray(cc), colp_val=jnp.asarray(cv),
+        rowp_row=jnp.asarray(rr), rowp_col=jnp.asarray(rc), rowp_val=jnp.asarray(rv),
+        b_send_idx=jnp.asarray(plan.b_send_idx),
+        c_recv_rows=jnp.asarray(plan.c_send_rows.transpose(1, 0, 2)),
+        meta=dict(P=plan.P, max_b=plan.max_b, max_c=plan.max_c,
+                  m_local=int(next(iter(m_locals)))),
+    )
+
+
+def hier_exec_arrays(hier: HierPlan) -> HierExecPlan:
+    """Convert a HierPlan into stacked device arrays for the (g,l) mesh."""
+    base = hier.base
+    P_, G, L = base.P, hier.G, hier.L
+    m_locals = {b[1] - b[0] for b in base.bounds}
+    if len(m_locals) != 1:
+        raise ValueError("row blocks must be equal-sized; pad M to P|M first")
+    dr, dc, dv = _stack_coo(base.a_diag)
+
+    # column part: remap flat cols to the hierarchical gathered space
+    colp_csrs = base.a_colpart
+    nnzc = max(max((c.nnz for c in colp_csrs), default=0), 1)
+    cr = np.zeros((P_, nnzc), np.int32)
+    cc = np.zeros((P_, nnzc), np.int32)
+    cv = np.zeros((P_, nnzc), np.float32)
+    for p in range(P_):
+        coo = colp_csrs[p].to_coo()
+        cr[p, : coo.nnz] = coo.row
+        cc[p, : coo.nnz] = hier.colpart_flat_cols[p]
+        cv[p, : coo.nnz] = coo.val
+
+    # row part: remap flat rows (p*max_c + s) -> (p*max_cg + group_slot)
+    rowp_csrs = base.a_rowpart
+    nnzr = max(max((c.nnz for c in rowp_csrs), default=0), 1)
+    rr = np.zeros((P_, nnzr), np.int32)
+    rc = np.zeros((P_, nnzr), np.int32)
+    rv = np.zeros((P_, nnzr), np.float32)
+    for q in range(P_):
+        coo = rowp_csrs[q].to_coo()
+        flat = coo.row.astype(np.int64)
+        ps, slots = flat // base.max_c, flat % base.max_c
+        gslot = hier.c_slot_of_pair[q, ps, slots]
+        assert np.all(gslot >= 0)
+        rr[q, : coo.nnz] = (ps * hier.max_cg + gslot).astype(np.int32)
+        rc[q, : coo.nnz] = coo.col
+        rv[q, : coo.nnz] = coo.val
+
+    def _r(x, extra=()):  # [P, ...] -> [G, L, ...]
+        return jnp.asarray(x.reshape((G, L) + x.shape[1:]))
+
+    c_recv = hier.c_group_rows.transpose(1, 0, 2).reshape(G, L, hier.G, hier.max_cg)
+    return HierExecPlan(
+        diag_row=_r(dr), diag_col=_r(dc), diag_val=_r(dv),
+        colp_row=_r(cr), colp_col=_r(cc), colp_val=_r(cv),
+        rowp_row=_r(rr), rowp_col=_r(rc), rowp_val=_r(rv),
+        b_group_send_idx=_r(hier.b_group_send_idx),
+        c_recv_rows=jnp.asarray(c_recv),
+        meta=dict(G=G, L=L, max_bg=hier.max_bg, max_cg=hier.max_cg,
+                  m_local=int(next(iter(m_locals)))),
+    )
+
+
+# ---------------------------------------------------------------------------
+# compute primitives
+# ---------------------------------------------------------------------------
+
+
+def coo_spmm_local(row: jax.Array, col: jax.Array, val: jax.Array,
+                   b: jax.Array, m_out: int) -> jax.Array:
+    """C[m_out, N] = scatter-add_{e} val[e] * b[col[e]] into row[e].
+
+    Padded entries carry val == 0 so they contribute nothing.
+    """
+    gathered = b[col] * val[:, None]
+    return jnp.zeros((m_out, b.shape[1]), b.dtype).at[row].add(gathered)
+
+
+def _gather_send_rows(b_local: jax.Array, idx: jax.Array) -> jax.Array:
+    """Pack send buffer: rows b_local[idx] with -1 padding zeroed."""
+    safe = jnp.maximum(idx, 0)
+    rows = b_local[safe.reshape(-1)].reshape(idx.shape + (b_local.shape[1],))
+    return jnp.where((idx >= 0)[..., None], rows, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# flat executor (paper §5 / Fig. 1)
+# ---------------------------------------------------------------------------
+
+
+def flat_spmm(plan: FlatExecPlan, b_global: jax.Array, mesh: Mesh,
+              axis: str = "x") -> jax.Array:
+    """Execute ``C = A @ B`` with the flat SHIRO schedule on ``mesh[axis]``.
+
+    ``b_global``: [K, N] dense matrix, row-sharded over ``axis``.
+    Returns C [M, N] row-sharded the same way.
+    """
+    m_local = plan.meta["m_local"]
+    P_ = plan.P
+
+    def body(diag_row, diag_col, diag_val, colp_row, colp_col, colp_val,
+             rowp_row, rowp_col, rowp_val, b_send_idx, c_recv_rows, b_loc):
+        (diag_row, diag_col, diag_val, colp_row, colp_col, colp_val,
+         rowp_row, rowp_col, rowp_val, b_send_idx, c_recv_rows) = (
+            x[0] for x in (diag_row, diag_col, diag_val, colp_row, colp_col,
+                           colp_val, rowp_row, rowp_col, rowp_val,
+                           b_send_idx, c_recv_rows))
+        n = b_loc.shape[1]
+
+        # ① pack + exchange B rows (column-based communication, Fig. 1(b))
+        send_b = _gather_send_rows(b_loc, b_send_idx)  # [P, max_b, N]
+        recv_b = jax.lax.all_to_all(send_b, axis, 0, 0, tiled=False)
+
+        # ② remote computation (row-based, Fig. 1(c)): partial C rows for
+        #    every other process, computed against the LOCAL B block.
+        partials = coo_spmm_local(rowp_row, rowp_col, rowp_val, b_loc,
+                                  P_ * plan.max_c)  # [P*max_c, N]
+        send_c = partials.reshape(P_, plan.max_c, n)
+        recv_c = jax.lax.all_to_all(send_c, axis, 0, 0, tiled=False)
+
+        # ③ local compute: diagonal block + column-covered remote nonzeros
+        c = coo_spmm_local(diag_row, diag_col, diag_val, b_loc, m_local)
+        recv_b_flat = recv_b.reshape(P_ * plan.max_b, n)
+        c = c + coo_spmm_local(colp_row, colp_col, colp_val, recv_b_flat, m_local)
+
+        # ④ result aggregation: scatter received partial C rows
+        tgt = c_recv_rows.reshape(-1)  # [P*max_c]
+        vals = recv_c.reshape(P_ * plan.max_c, n)
+        vals = jnp.where((tgt >= 0)[:, None], vals, 0.0)
+        c = c.at[jnp.maximum(tgt, 0)].add(vals)
+        return c
+
+    from jax import shard_map
+
+    specs_in = (
+        [P(axis)] * 9 + [P(axis), P(axis)] + [P(axis)]
+    )
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=tuple(specs_in), out_specs=P(axis),
+                   check_vma=False)
+    return fn(plan.diag_row, plan.diag_col, plan.diag_val,
+              plan.colp_row, plan.colp_col, plan.colp_val,
+              plan.rowp_row, plan.rowp_col, plan.rowp_val,
+              plan.b_send_idx, plan.c_recv_rows, b_global)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical executor (paper §6 / Alg. 1)
+# ---------------------------------------------------------------------------
+
+
+def hier_spmm(plan: HierExecPlan, b_global: jax.Array, mesh: Mesh,
+              group_axis: str = "g", local_axis: str = "l") -> jax.Array:
+    """Two-tier SHIRO schedule on a (group, local) mesh.
+
+    Program order follows paper Alg. 1; the two stages use disjoint axes
+    (inter ↔ ``group_axis``, intra ↔ ``local_axis``) so the compiler can
+    overlap them (Fig. 6(f)).
+    """
+    m_local = plan.meta["m_local"]
+    G, L = plan.G, plan.L
+    max_bg, max_cg = plan.max_bg, plan.max_cg
+
+    def body(diag_row, diag_col, diag_val, colp_row, colp_col, colp_val,
+             rowp_row, rowp_col, rowp_val, b_group_send_idx, c_recv_rows,
+             b_loc):
+        (diag_row, diag_col, diag_val, colp_row, colp_col, colp_val,
+         rowp_row, rowp_col, rowp_val, b_group_send_idx, c_recv_rows) = (
+            x[0, 0] for x in (diag_row, diag_col, diag_val, colp_row,
+                              colp_col, colp_val, rowp_row, rowp_col,
+                              rowp_val, b_group_send_idx, c_recv_rows))
+        n = b_loc.shape[1]
+
+        # Stage I.① (inter-group, column-based): ship de-duplicated B rows
+        # once per destination group. Pairs (g, l) <-> (g', l).
+        send_bg = _gather_send_rows(b_loc, b_group_send_idx)  # [G, max_bg, N]
+        recv_bg = jax.lax.all_to_all(send_bg, group_axis, 0, 0, tiled=False)
+
+        # Stage I.① (intra-group, row-based): compute partials and
+        # pre-aggregate within the source group via reduce-scatter; each
+        # member ends up owning the aggregates for destinations that share
+        # its local rank (the "representative" of paper Fig. 6(e)).
+        partials = coo_spmm_local(rowp_row, rowp_col, rowp_val, b_loc,
+                                  G * L * max_cg)  # [(gd,ld,slot), N]
+        partials = partials.reshape(G, L * max_cg, n)
+        agg = jax.lax.psum_scatter(partials, local_axis,
+                                   scatter_dimension=1, tiled=True)
+        # agg: [G(dst), max_cg, N] — aggregated partials for dests with my l.
+
+        # Stage II.② (inter-group, row-based): aggregated C rows cross the
+        # slow tier once per source group.
+        recv_cg = jax.lax.all_to_all(agg, group_axis, 0, 0, tiled=False)
+        # recv_cg: [G(src), max_cg, N] for THIS process as destination.
+
+        # Stage II.② (intra-group, column-based): distribute fetched B rows
+        # inside the destination group.
+        all_bg = jax.lax.all_gather(recv_bg, local_axis, axis=0, tiled=False)
+        # all_bg: [L(src), G(src), max_bg, N] — the group's fetched rows.
+
+        # local compute
+        c = coo_spmm_local(diag_row, diag_col, diag_val, b_loc, m_local)
+        bg_flat = all_bg.reshape(L * G * max_bg, n)
+        c = c + coo_spmm_local(colp_row, colp_col, colp_val, bg_flat, m_local)
+
+        # result aggregation of row-based partials
+        tgt = c_recv_rows.reshape(-1)  # [G*max_cg]
+        vals = recv_cg.reshape(G * max_cg, n)
+        vals = jnp.where((tgt >= 0)[:, None], vals, 0.0)
+        c = c.at[jnp.maximum(tgt, 0)].add(vals)
+        return c[None]
+
+    from jax import shard_map
+
+    gl = P(group_axis, local_axis)
+    specs_in = [gl] * 11 + [P((group_axis, local_axis))]
+    fn = shard_map(body, mesh=mesh, in_specs=tuple(specs_in),
+                   out_specs=gl, check_vma=False)
+    out = fn(plan.diag_row, plan.diag_col, plan.diag_val,
+             plan.colp_row, plan.colp_col, plan.colp_val,
+             plan.rowp_row, plan.rowp_col, plan.rowp_val,
+             plan.b_group_send_idx, plan.c_recv_rows, b_global)
+    return out.reshape(-1, b_global.shape[1])

@@ -1,0 +1,326 @@
+"""Hierarchical (two-tier) extension of the SHIRO plan (paper §6).
+
+Processes form a G × L grid: G groups ("pods" over the slow tier) of L
+local members each (fast tier). Process id = g * L + l.
+
+Column part (B rows), paper §6.1.2 "column-based redundancy elimination":
+  stage I.①  inter-group: source q sends, ONCE per destination group, the
+             de-duplicated union of B rows any member of that group needs;
+  stage II.② intra-group: rows are redistributed inside the dest group.
+
+Row part (partial C rows), "row-based redundancy elimination":
+  stage I.①  intra-group: members of a source group pre-aggregate partials
+             that target the same destination C row;
+  stage II.② inter-group: aggregated partials cross the slow tier once.
+
+SPMD realization (beyond-paper scheduling note, DESIGN.md §2): the paper's
+"group representative" becomes same-local-rank pairing — the all_to_all
+over the group axis pairs (g, l) with (g', l), and the reduce-scatter over
+the local axis assigns each destination process's traffic to the member
+sharing its local rank. Inter-group byte counts match the paper exactly;
+there is no single-representative bottleneck.
+
+Buffer layouts (static, jit-compatible):
+  b_group_send_idx [P_src, G_dst, max_bg]   local B row at src, -1 pad
+  b_flat_index maps each process's column-part flat column space
+     (see planner.SpmmPlan) onto the group receive space
+     [L_src, G_src, max_bg] flattened — so after the intra-group
+     all_gather each process gathers exactly the rows it needs.
+  c_group_rows [G_src, P_dst, max_cg]       DEST-local C row index, -1 pad
+  c_slot_of_pair [P_src, P_dst, max_c] -> slot in the (src-group, dst)
+     union list, used by sources to write partials into the group layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .planner import SpmmPlan
+
+__all__ = ["HierPlan", "build_hier_plan", "build_group_aware_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HierPlan:
+    """Two-tier buffer layout derived from a flat SpmmPlan."""
+
+    base: SpmmPlan
+    G: int
+    L: int
+    max_bg: int
+    max_cg: int
+    # column part
+    b_group_send_idx: np.ndarray  # [P, G, max_bg] int32, local B row at src
+    colpart_flat_cols: List[np.ndarray]  # per dest p: new flat col for each
+    #   nonzero of base.a_colpart[p] (indexes [L, G, max_bg] space), int32
+    # row part
+    c_group_rows: np.ndarray  # [G, P, max_cg] int32, dest-local C row
+    c_slot_of_pair: np.ndarray  # [P, P, max_c] int32, slot into group list
+
+    # ---- analytics ----------------------------------------------------
+    def inter_group_rows(self) -> Tuple[int, int]:
+        """(B rows, C rows) crossing the slow tier under the hier plan."""
+        b = int((self.b_group_send_idx >= 0).sum())
+        # subtract same-group (no slow link) transfers
+        P, G = self.base.P, self.G
+        L = self.L
+        b_same = 0
+        c_cross = 0
+        for src in range(P):
+            gs = src // L
+            b_same += int((self.b_group_send_idx[src, gs] >= 0).sum())
+        b -= b_same
+        for gs in range(G):
+            for dst in range(P):
+                if dst // L != gs:
+                    c_cross += int((self.c_group_rows[gs, dst] >= 0).sum())
+        return b, c_cross
+
+    def inter_group_rows_flat(self) -> Tuple[int, int]:
+        """Slow-tier rows if the flat plan were used directly (baseline)."""
+        P, L = self.base.P, self.L
+        b = c = 0
+        for (p, q), pp in self.base.pair_plans.items():
+            if p // L != q // L:
+                b += pp.col_ids.size
+                c += pp.row_ids.size
+        return b, c
+
+
+def build_hier_plan(base: SpmmPlan, G: int, L: int, pad_to: int = 1) -> HierPlan:
+    """Derive the two-tier layout from a flat SHIRO plan.
+
+    Group dedup (B): for destination group gd and source q, the union of
+    col_ids over all members p ∈ gd. Pre-aggregation (C): for source group
+    gs and destination p, the union of row_ids over all members q ∈ gs.
+    """
+    P = base.P
+    if G * L != P:
+        raise ValueError(f"G*L={G * L} != P={P}")
+
+    def _round(v: int) -> int:
+        v = ((v + pad_to - 1) // pad_to) * pad_to if v else 0
+        return max(v, 1)
+
+    # ---------------- column part: (src q, dest group) dedup -----------
+    b_union: dict = {}
+    for (p, q), pp in base.pair_plans.items():
+        gd = p // L
+        key = (q, gd)
+        b_union.setdefault(key, set()).update(pp.col_ids.tolist())
+    max_bg = _round(max((len(v) for v in b_union.values()), default=0))
+    b_group_send_idx = np.full((P, G, max_bg), -1, np.int32)
+    b_slot: dict = {}
+    for (q, gd), rows in b_union.items():
+        rows_sorted = np.sort(np.fromiter(rows, dtype=np.int64, count=len(rows)))
+        b_group_send_idx[q, gd, : rows_sorted.size] = rows_sorted
+        b_slot[(q, gd)] = {int(r): s for s, r in enumerate(rows_sorted)}
+
+    # Remap each dest's column-part flat columns from the flat receive
+    # space (q*max_b + slot) to the hierarchical gathered space.
+    # After stage I.① a2a over groups + stage II.② all_gather over locals,
+    # dest p holds a buffer indexed [l_src, g_src, max_bg]: entry
+    # (ls, gs, s) = B row b_group_send_idx[gs*L+ls, gd, s] of source
+    # process gs*L+ls (gd = p's group).
+    colpart_flat_cols: List[np.ndarray] = []
+    for p in range(P):
+        gd = p // L
+        csr = base.a_colpart[p]
+        new_cols = np.empty(csr.nnz, np.int32)
+        # decode flat col -> (q, slot) -> global-local B row at q -> hier slot
+        flat = csr.indices.astype(np.int64)
+        qs = flat // base.max_b
+        slots = flat % base.max_b
+        for e in range(csr.nnz):
+            q = int(qs[e])
+            local_row = int(base.b_send_idx[q, p, int(slots[e])])
+            s = b_slot[(q, gd)][local_row]
+            ls, gs = q % L, q // L
+            new_cols[e] = (ls * G + gs) * max_bg + s
+        colpart_flat_cols.append(new_cols)
+
+    # ---------------- row part: (src group, dest p) union --------------
+    c_union: dict = {}
+    for (p, q), pp in base.pair_plans.items():
+        gs = q // L
+        key = (gs, p)
+        c_union.setdefault(key, set()).update(pp.row_ids.tolist())
+    max_cg = _round(max((len(v) for v in c_union.values()), default=0))
+    c_group_rows = np.full((G, P, max_cg), -1, np.int32)
+    c_slot: dict = {}
+    for (gs, p), rows in c_union.items():
+        rows_sorted = np.sort(np.fromiter(rows, dtype=np.int64, count=len(rows)))
+        c_group_rows[gs, p, : rows_sorted.size] = rows_sorted
+        c_slot[(gs, p)] = {int(r): s for s, r in enumerate(rows_sorted)}
+
+    c_slot_of_pair = np.full((P, P, base.max_c), -1, np.int32)
+    for (p, q), pp in base.pair_plans.items():
+        gs = q // L
+        lut = c_slot[(gs, p)]
+        for s, r in enumerate(pp.row_ids.tolist()):
+            c_slot_of_pair[q, p, s] = lut[int(r)]
+
+    return HierPlan(
+        base=base,
+        G=G,
+        L=L,
+        max_bg=max_bg,
+        max_cg=max_cg,
+        b_group_send_idx=b_group_send_idx,
+        colpart_flat_cols=colpart_flat_cols,
+        c_group_rows=c_group_rows,
+        c_slot_of_pair=c_slot_of_pair,
+    )
+
+
+def build_group_aware_plan(a, P: int, G: int, L: int, pad_to: int = 1):
+    """Beyond-paper: WEIGHTED covers that anticipate group dedup (§5.2 hook).
+
+    The paper solves each off-diagonal block's cover with uniform weights
+    and only afterwards de-duplicates B rows at group granularity (§6.1).
+    But the two decisions interact: a B row needed by k members of the
+    destination group crosses the slow tier ONCE under dedup, so its
+    *marginal* inter-group cost is 1/k — choosing it over a C row is
+    cheaper than the uniform cover believes.
+
+    Two-pass scheme: pass 1 counts, for every (source q, dest group gd),
+    how many group members' blocks touch each B row; pass 2 re-solves each
+    inter-group pair's cover via the weighted min-cut (Dinic) with
+    w_col[j] = 1/shared_count, w_row = 1. Intra-group pairs keep uniform
+    weights. Returns (SpmmPlan, HierPlan) built from the re-weighted
+    covers — drop-in for the executors.
+    """
+    import numpy as np
+
+    from .planner import build_pair_plan, build_plan
+    from .sparse import block_rows
+
+    m, k = a.shape
+    bounds = block_rows(m, P)
+    cbounds = block_rows(k, P)
+
+    # pass 1: shared-fetch counts per (source q, dest group, local B row)
+    share = {}
+    blocks = {}
+    for p in range(P):
+        rlo, rhi = bounds[p]
+        a_p = a.row_block(rlo, rhi)
+        for q in range(P):
+            if q == p:
+                continue
+            clo, chi = cbounds[q]
+            blk = a_p.col_block(clo, chi)
+            blocks[(p, q)] = blk
+            gd = p // L
+            cnt = share.setdefault((q, gd), np.zeros(chi - clo, np.int64))
+            cols = blk.nonzero_cols()
+            cnt[cols] += 1
+
+    # pass 2: build the full plan, re-weighting inter-group pairs
+    base = build_plan(a, P, "joint", pad_to=pad_to)
+    pair_plans = dict(base.pair_plans)
+    changed = 0
+    for (p, q), blk in blocks.items():
+        if p // L == q // L:
+            continue  # intra-group: uniform cover already optimal
+        gd = p // L
+        cnt = share[(q, gd)]
+        w_col = 1.0 / np.maximum(cnt, 1).astype(np.float64)
+        w_row = np.ones(blk.shape[0], np.float64)
+        new = build_pair_plan(blk, p, q, "joint", w_row=w_row, w_col=w_col)
+        if new.mu != pair_plans[(p, q)].mu or \
+                new.col_ids.size != pair_plans[(p, q)].col_ids.size:
+            changed += 1
+        pair_plans[(p, q)] = new
+
+    # rebuild the padded layout from the new pair plans via build_plan's
+    # machinery: easiest correct route is to re-run the packing with the
+    # modified covers — reuse build_plan internals by monkey-free rebuild.
+    from .planner import SpmmPlan  # noqa: F401  (doc pointer)
+    rebuilt = _rebuild_from_pairs(a, P, pair_plans, bounds, cbounds, pad_to)
+    hier = build_hier_plan(rebuilt, G, L, pad_to=pad_to)
+    return rebuilt, hier, changed
+
+
+def _rebuild_from_pairs(a, P, pair_plans, bounds, cbounds, pad_to):
+    """Re-pack a SpmmPlan from externally (re-)computed PairPlans."""
+    import numpy as np
+
+    from .planner import SpmmPlan
+    from .sparse import COOMatrix, CSRMatrix, csr_from_coo
+
+    a_diag = []
+    for p in range(P):
+        rlo, rhi = bounds[p]
+        clo, chi = cbounds[p]
+        a_diag.append(a.row_block(rlo, rhi).col_block(clo, chi))
+
+    def _round(v):
+        v = ((v + pad_to - 1) // pad_to) * pad_to if v else 0
+        return max(v, 1)
+
+    max_b = _round(max((pp.col_ids.size for pp in pair_plans.values()), default=0))
+    max_c = _round(max((pp.row_ids.size for pp in pair_plans.values()), default=0))
+    b_send_idx = np.full((P, P, max_b), -1, np.int32)
+    c_send_rows = np.full((P, P, max_c), -1, np.int32)
+    for (p, q), pp in pair_plans.items():
+        b_send_idx[q, p, : pp.col_ids.size] = pp.col_ids
+        c_send_rows[q, p, : pp.row_ids.size] = pp.row_ids
+
+    a_colpart, a_rowpart = [], []
+    for p in range(P):
+        m_p = bounds[p][1] - bounds[p][0]
+        rows_l, cols_l, vals_l = [], [], []
+        for q in range(P):
+            if q == p or (p, q) not in pair_plans:
+                continue
+            pp = pair_plans[(p, q)]
+            coo = pp.a_col.to_coo()
+            if coo.nnz:
+                slot = np.full(pp.a_col.shape[1], -1, np.int64)
+                slot[pp.col_ids] = np.arange(pp.col_ids.size)
+                rows_l.append(coo.row.astype(np.int64))
+                cols_l.append(q * max_b + slot[coo.col])
+                vals_l.append(coo.val)
+        if rows_l:
+            a_colpart.append(csr_from_coo(COOMatrix(
+                (m_p, P * max_b), np.concatenate(rows_l).astype(np.int32),
+                np.concatenate(cols_l).astype(np.int32),
+                np.concatenate(vals_l))))
+        else:
+            a_colpart.append(CSRMatrix((m_p, P * max_b),
+                                       np.zeros(m_p + 1, np.int32),
+                                       np.empty(0, np.int32),
+                                       np.empty(0, np.float32)))
+    for q in range(P):
+        k_q = cbounds[q][1] - cbounds[q][0]
+        rows_l, cols_l, vals_l = [], [], []
+        for p in range(P):
+            if p == q or (p, q) not in pair_plans:
+                continue
+            pp = pair_plans[(p, q)]
+            roo = pp.a_row.to_coo()
+            if roo.nnz:
+                slot = np.full(pp.a_row.shape[0], -1, np.int64)
+                slot[pp.row_ids] = np.arange(pp.row_ids.size)
+                rows_l.append(p * max_c + slot[roo.row])
+                cols_l.append(roo.col.astype(np.int64))
+                vals_l.append(roo.val)
+        if rows_l:
+            a_rowpart.append(csr_from_coo(COOMatrix(
+                (P * max_c, k_q), np.concatenate(rows_l).astype(np.int32),
+                np.concatenate(cols_l).astype(np.int32),
+                np.concatenate(vals_l))))
+        else:
+            a_rowpart.append(CSRMatrix((P * max_c, k_q),
+                                       np.zeros(P * max_c + 1, np.int32),
+                                       np.empty(0, np.int32),
+                                       np.empty(0, np.float32)))
+    return SpmmPlan(
+        P=P, shape=a.shape, strategy="joint-groupaware",
+        bounds=tuple(bounds), pair_plans=pair_plans,
+        max_b=max_b, max_c=max_c, b_send_idx=b_send_idx,
+        c_send_rows=c_send_rows, a_diag=a_diag,
+        a_colpart=a_colpart, a_rowpart=a_rowpart)

@@ -1,0 +1,96 @@
+"""Distribution context: mesh + axis-name conventions.
+
+The production mesh is (pod, data, model) — see launch/mesh.py. Model code
+never hard-codes axis names; it consults a DistContext, which also makes
+every model runnable unsharded (dist=None) for CPU smoke tests.
+
+Axis roles:
+  pod    — slow tier (inter-pod DCN/optical). Batch parallel + the OUTER
+           group axis of SHIRO's hierarchical schedules.
+  data   — fast tier (intra-pod ICI). Batch parallel, FSDP parameter
+           sharding, and SHIRO's intra-group axis.
+  model  — tensor/expert parallel (heads, ffn, experts, vocab).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["DistContext", "make_context", "shard", "logical_to_spec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]  # e.g. ("pod", "data") or ("data",)
+    model_axis: str = "model"
+    pod_axis: Optional[str] = None  # set when a slow tier exists
+    fsdp_axis: Optional[str] = None  # axis params are additionally sharded on
+
+    @property
+    def batch_size_divisor(self) -> int:
+        return int(
+            __import__("math").prod(self.mesh.shape[a] for a in self.batch_axes)
+        )
+
+    @property
+    def model_size(self) -> int:
+        return int(self.mesh.shape[self.model_axis])
+
+    def axis_size(self, name: str) -> int:
+        return int(self.mesh.shape[name])
+
+    def divisible(self, n: int, axis: str) -> bool:
+        return n % self.axis_size(axis) == 0
+
+    def model_axis_if_divisible(self, n: int):
+        """'model' when n shards evenly, else None (replicate)."""
+        return self.model_axis if self.divisible(n, self.model_axis) else None
+
+
+def make_context(mesh: Mesh, fsdp: bool = False) -> DistContext:
+    names = mesh.axis_names
+    if "pod" in names:
+        batch = ("pod", "data")
+        pod = "pod"
+    else:
+        batch = ("data",)
+        pod = None
+    return DistContext(
+        mesh=mesh,
+        batch_axes=batch,
+        model_axis="model",
+        pod_axis=pod,
+        fsdp_axis="data" if fsdp else None,
+    )
+
+
+def shard(x, dist: Optional[DistContext], spec: Optional[P]):
+    """with_sharding_constraint that degrades to identity when dist is None."""
+    if dist is None or spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(dist.mesh, spec))
+
+
+def logical_to_spec(dist: Optional[DistContext], *roles: Optional[str]) -> Optional[P]:
+    """Map logical dim roles to a PartitionSpec.
+
+    Roles: 'batch' | 'model' | 'fsdp' | 'vocab' | None (replicated).
+    Returns None when dist is None (unsharded execution).
+    """
+    if dist is None:
+        return None
+    out = []
+    for r in roles:
+        if r == "batch":
+            out.append(dist.batch_axes)
+        elif r in ("model", "vocab"):
+            out.append(dist.model_axis)
+        elif r == "fsdp":
+            out.append(dist.fsdp_axis)
+        else:
+            out.append(None)
+    return P(*out)

@@ -1,0 +1,159 @@
+"""Parameter / cache / batch sharding rules for the (pod, data, model) mesh.
+
+Rules are name-based over pytree paths (MaxText-style logical rules,
+condensed). ``model`` carries tensor/expert parallelism; ``data``
+optionally carries FSDP; batch always shards over (pod, data).
+
+Every rule degrades to replication when a dimension does not divide the
+axis size — the dry-run relies on this to stay compile-clean across all
+10 architectures × 4 shapes × 2 meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from .context import DistContext
+
+__all__ = ["param_specs", "param_shardings", "batch_specs", "cache_specs",
+           "opt_state_specs", "as_shardings"]
+
+
+def _maybe(dist: DistContext, axis: Optional[str], dim: int) -> Optional[str]:
+    """axis if it divides dim, else None (replicate)."""
+    if axis is None:
+        return None
+    return axis if dim % dist.axis_size(axis) == 0 else None
+
+
+def _leaf_spec(path: str, shape, dist: DistContext) -> P:
+    """Spec for one (unstacked) parameter leaf."""
+    m, f = dist.model_axis, dist.fsdp_axis
+    nd = len(shape)
+
+    def ok(axis, d):
+        return _maybe(dist, axis, shape[d])
+
+    if nd == 0:
+        return P()
+    last = path.split("/")[-1]
+    if last in ("router",):
+        return P(ok(f, 0), None)
+    if last in ("w1", "w3") and nd == 3:  # moe experts [E, D, F]
+        return P(ok(m, 0), ok(f, 1), None)
+    if last == "w2" and nd == 3:  # [E, F, D]
+        return P(ok(m, 0), None, ok(f, 2))
+    if last == "embed":
+        return P(ok(m, 0), ok(f, 1))
+    if last == "lm_head":
+        return P(ok(f, 0), ok(m, 1))
+    if last in ("wq", "wk", "wv", "w1", "w3", "in_proj",
+                "in_proj_x", "in_proj_z", "adapter"):
+        return P(ok(f, 0), ok(m, 1))
+    if last in ("wo", "w2", "out_proj"):
+        return P(ok(m, 0), ok(f, 1))
+    if last in ("bq", "bk", "bv"):
+        return P(ok(m, 0))
+    if last in ("conv_w",):
+        return P(None, ok(m, 1))
+    if last in ("conv_b", "D", "dt_bias") and nd == 1:
+        return P(ok(m, 0))
+    if last in ("x_dbl", "A_log") and nd == 2:  # [di, *]
+        return P(ok(m, 0), None)
+    if last == "dt_proj":  # [dtr, di]
+        return P(None, ok(m, 1))
+    if last in ("bc_proj", "dt_proj2"):  # [D, *]
+        return P(ok(f, 0), None)
+    # norms, scalar vectors, mamba2 A_log [nh]
+    return P(*([None] * nd))
+
+
+def param_specs(params_shapes: Any, cfg: ModelConfig, dist: DistContext) -> Any:
+    """Pytree of PartitionSpec matching ``params_shapes`` (shapes or arrays).
+
+    Stacked layer params ([L, ...] leaves under 'layers'/'encoder') get a
+    leading None (layers are scanned, never sharded).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for path, leaf in flat:
+        keys = [p.key if hasattr(p, "key") else str(p) for p in path]
+        pathstr = "/".join(str(k) for k in keys)
+        shape = tuple(np.shape(leaf)) if not hasattr(leaf, "shape") else tuple(leaf.shape)
+        stacked = ("layers" in keys)
+        if stacked:
+            inner = _leaf_spec(pathstr, shape[1:], dist)
+            specs.append(P(None, *inner))
+        else:
+            specs.append(_leaf_spec(pathstr, shape, dist))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def as_shardings(specs: Any, dist: DistContext) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(dist.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(params_shapes: Any, cfg: ModelConfig, dist: DistContext) -> Any:
+    return as_shardings(param_specs(params_shapes, cfg, dist), dist)
+
+
+def opt_state_specs(pspecs: Any) -> dict:
+    """Adam m/v mirror the param sharding; step is replicated."""
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def batch_specs(cfg: ModelConfig, dist: DistContext, batch_size: int) -> dict:
+    """Specs for a train/prefill batch dict."""
+    b_ax = dist.batch_axes if batch_size % dist.batch_size_divisor == 0 else None
+    # fall back to sharding over 'data' only, then fully replicated
+    if b_ax is None and batch_size % dist.axis_size("data") == 0:
+        b_ax = ("data",)
+    spec2 = P(b_ax, None)
+    spec3 = P(b_ax, None, None)
+    out = {"tokens": spec2}
+    if cfg.family == "encdec":
+        out["enc_embeds"] = spec3
+    elif cfg.frontend is not None:
+        out["prefix_embeds"] = spec3
+    return out
+
+
+def cache_specs(cfg: ModelConfig, dist: DistContext, batch_size: int) -> Any:
+    """Specs for DecodeCache fields (None fields get no entry)."""
+    b_ax = dist.batch_axes if batch_size % dist.batch_size_divisor == 0 else None
+    if b_ax is None and batch_size % dist.axis_size("data") == 0:
+        b_ax = ("data",)
+    kv_m = _maybe(dist, dist.model_axis, cfg.n_kv_heads)
+    di_m = _maybe(dist, dist.model_axis, cfg.d_inner)
+    out = {}
+    if cfg.family in ("dense", "moe", "vlm", "audio", "encdec"):
+        if cfg.kv_seq_shard and kv_m is None:
+            # flash-decoding-style: heads don't shard, so shard the cache
+            # LENGTH over the model axis instead (§Perf optimization) —
+            # each model rank owns a contiguous 1/M of the context and
+            # computes partial attention; softmax partials combine via the
+            # compiler-inserted reduction.
+            out["k"] = P(None, b_ax, None, dist.model_axis, None)
+            out["v"] = P(None, b_ax, None, dist.model_axis, None)
+            return {**out, "length": P()}
+        out["k"] = P(None, b_ax, kv_m, None, None)
+        out["v"] = P(None, b_ax, kv_m, None, None)
+    if cfg.is_ssm:
+        if cfg.ssm_version == 1:
+            out["ssm_h"] = P(None, b_ax, di_m, None)
+        else:
+            nh = cfg.ssm_heads or max(cfg.d_inner // 64, 1)
+            out["ssm_h"] = P(None, b_ax, _maybe(dist, dist.model_axis, nh),
+                             None, None)
+        out["ssm_conv"] = P(None, b_ax, None, di_m)
+    if cfg.family == "hybrid":
+        out["shared_k"] = P(None, b_ax, kv_m, None, None)
+        out["shared_v"] = P(None, b_ax, kv_m, None, None)
+    out["length"] = P()
+    return out

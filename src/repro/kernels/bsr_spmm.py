@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: block-sparse-row (BSR/ELL) SpMM — ``C = A @ B``.
+
+TPU adaptation of the paper's cuSPARSE CSR SpMM (DESIGN.md §2): instead of
+per-row gathers (GPU idiom, hostile to the MXU), A is stored as dense
+(bm × bk) blocks in an ELL layout — ``block_cols[mb, t]`` names the block
+column of the t-th stored block in block-row mb (−1 = padding, its block is
+all-zero). Every stored block feeds the 128×128 MXU directly.
+
+Grid: (mb, n_tiles, t). The B tile for step (i, j, t) is selected by a
+*scalar-prefetched* index map reading ``block_cols[i, t]`` — the Pallas
+equivalent of indirect addressing, resolved at tile-fetch time so the
+pipeline can double-buffer the gather. The output tile (i, j) is revisited
+across the innermost t axis and accumulated in VMEM (init at t == 0).
+
+VMEM working set per step: bm·bk (A block) + bk·bn (B tile) + bm·bn (C
+tile); with the default 128³ tiles that is 3·64 KiB of fp32 — comfortably
+inside the ~16 MiB VMEM budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bsr_spmm_pallas"]
+
+
+def _kernel(cols_ref, blocks_ref, b_ref, out_ref, *, t_steps: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a_blk = blocks_ref[0, 0]  # [bm, bk]
+    b_blk = b_ref[0]  # [bk, bn]
+    # padded slots have all-zero A blocks, so no masking is needed; the
+    # clamped index map only changes WHICH (ignored) B tile is prefetched.
+    # The out tile is an f32 accumulator (MXU-native): bf16 inputs,
+    # f32 partials — matches the ref.py oracle's accumulation order.
+    out_ref[...] += jax.lax.dot_general(
+        a_blk, b_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def bsr_spmm_pallas(
+    block_cols: jax.Array,  # [mb, t] int32, -1 padded
+    blocks: jax.Array,  # [mb, t, bm, bk]
+    b: jax.Array,  # [kb*bk, n]
+    *,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns C = A @ B, shape [mb*bm, n]. ``n`` must divide by ``bn``."""
+    mb, t_steps, bm, bk = blocks.shape
+    n = b.shape[1]
+    if n % bn:
+        raise ValueError(f"n={n} must be a multiple of bn={bn}")
+    n_tiles = n // bn
+    b3 = b.reshape(-1, bk, n)  # block-row view [kb, bk, n]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mb, n_tiles, t_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk), lambda i, j, t, cols: (i, t, 0, 0)),
+            pl.BlockSpec(
+                (1, bk, bn),
+                lambda i, j, t, cols: (jnp.maximum(cols[i, t], 0), 0, j),
+            ),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t, cols: (i, j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, t_steps=t_steps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb * bm, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(block_cols, blocks, b3)
+    return out.astype(b.dtype)

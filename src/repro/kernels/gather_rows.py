@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: comm-buffer pack — ``out[s, :] = B[idx[s], :]``.
+
+This is SHIRO's communication stage-① hot spot: before any B-row transfer
+(flat column-based or hierarchical inter-group fetch) the selected rows are
+packed into a contiguous send buffer. On GPU this is a gather kernel; on
+TPU we tile rows in groups of ``bs`` and let a scalar-prefetched index map
+fetch one source row per grid step, so the gather overlaps the pipeline's
+tile copies (HBM→VMEM) instead of issuing random accesses from compute.
+
+Padding: idx < 0 → output row zeroed (the send slot is a plan pad).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gather_rows_pallas"]
+
+
+def _kernel(idx_ref, b_ref, out_ref):
+    s = pl.program_id(0)
+    valid = idx_ref[s] >= 0
+    row = b_ref[0]  # [bn] tile of the prefetched source row
+    out_ref[0, :] = jnp.where(valid, row, jnp.zeros_like(row))
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def gather_rows_pallas(
+    b: jax.Array,  # [K, n]
+    idx: jax.Array,  # [S] int32, -1 padded
+    *,
+    bn: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns out [S, n] with out[s] = b[idx[s]] (zeros where idx < 0)."""
+    s_total = idx.shape[0]
+    n = b.shape[1]
+    if n % bn:
+        bn = n  # fall back to full-row tiles for narrow matrices
+    n_tiles = n // bn
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(s_total, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda s, j, idx: (jnp.maximum(idx[s], 0), j)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda s, j, idx: (s, j)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s_total, n), b.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "parallel"),
+        ),
+    )(idx, b)

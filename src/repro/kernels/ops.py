@@ -1,0 +1,70 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``*_op`` functions dispatch per platform: the Pallas TPU kernel on TPU
+backends, interpret-mode Pallas when ``REPRO_PALLAS_INTERPRET=1`` (CI /
+CPU validation), and the pure-jnp oracle otherwise. All three paths are
+numerically interchangeable (tests assert so), which keeps the distributed
+executors platform-portable.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as _ref
+from .bsr_spmm import bsr_spmm_pallas
+from .gather_rows import gather_rows_pallas
+from .scatter_add_rows import prepare_sorted_scatter, scatter_add_rows_sorted_pallas
+
+__all__ = [
+    "kernel_backend",
+    "bsr_spmm_op",
+    "gather_rows_op",
+    "scatter_add_rows_op",
+    "prepare_sorted_scatter",
+]
+
+
+def kernel_backend() -> str:
+    """'pallas' on TPU, 'interpret' if forced via env, else 'ref'."""
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return "interpret"
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return "ref"
+
+
+def bsr_spmm_op(block_cols: jax.Array, blocks: jax.Array, b: jax.Array,
+                *, bn: int = 128) -> jax.Array:
+    be = kernel_backend()
+    if be == "pallas":
+        return bsr_spmm_pallas(block_cols, blocks, b, bn=min(bn, b.shape[1]))
+    if be == "interpret":
+        return bsr_spmm_pallas(block_cols, blocks, b,
+                               bn=min(bn, b.shape[1]), interpret=True)
+    return _ref.bsr_spmm_ref(block_cols, blocks, b)
+
+
+def gather_rows_op(b: jax.Array, idx: jax.Array, *, bn: int = 512) -> jax.Array:
+    be = kernel_backend()
+    if be == "pallas":
+        return gather_rows_pallas(b, idx, bn=bn)
+    if be == "interpret":
+        return gather_rows_pallas(b, idx, bn=bn, interpret=True)
+    return _ref.gather_rows_ref(b, idx)
+
+
+def scatter_add_rows_op(c: jax.Array, partials: jax.Array, tgt: np.ndarray) -> jax.Array:
+    """tgt is a STATIC (host-side) target map — plans are offline in SHIRO."""
+    be = kernel_backend()
+    if be == "ref":
+        return _ref.scatter_add_rows_ref(c, partials, jnp.asarray(tgt))
+    perm, meta = prepare_sorted_scatter(np.asarray(tgt))
+    return scatter_add_rows_sorted_pallas(
+        c, partials[jnp.asarray(perm)], jnp.asarray(meta),
+        interpret=(be == "interpret"),
+    )

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the single source of correctness truth: kernel tests sweep
+shapes/dtypes and assert_allclose against these functions, and the
+distributed executors fall back to them on platforms without Pallas.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["bsr_spmm_ref", "gather_rows_ref", "scatter_add_rows_ref"]
+
+
+def bsr_spmm_ref(block_cols: jnp.ndarray, blocks: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Block-sparse (ELL-style BSR) matmul oracle.
+
+    block_cols: [mb, t] int32, block-column id of each stored block, -1 = pad
+    blocks:     [mb, t, bm, bk] float, stored dense blocks (pads are zero)
+    b:          [kb*bk, n] dense
+    returns     [mb*bm, n]
+    """
+    mb, t, bm, bk = blocks.shape
+    n = b.shape[1]
+    bt = b.reshape(-1, bk, n)  # [kb, bk, n]
+    safe = jnp.maximum(block_cols, 0)
+    gathered = bt[safe]  # [mb, t, bk, n]
+    gathered = jnp.where((block_cols >= 0)[:, :, None, None], gathered, 0.0)
+    out = jnp.einsum("mtik,mtkn->min", blocks.astype(jnp.float32),
+                     gathered.astype(jnp.float32))
+    return out.reshape(mb * bm, n).astype(b.dtype)
+
+
+def gather_rows_ref(b: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Comm-buffer pack oracle: out[s] = b[idx[s]], zeros where idx < 0."""
+    safe = jnp.maximum(idx, 0)
+    rows = b[safe]
+    return jnp.where((idx >= 0)[:, None], rows, 0.0).astype(b.dtype)
+
+
+def scatter_add_rows_ref(c: jnp.ndarray, partials: jnp.ndarray, tgt: jnp.ndarray) -> jnp.ndarray:
+    """Result-aggregation oracle: c[tgt[s]] += partials[s]; tgt<0 dropped."""
+    vals = jnp.where((tgt >= 0)[:, None], partials, 0.0)
+    return c.at[jnp.maximum(tgt, 0)].add(vals.astype(c.dtype))

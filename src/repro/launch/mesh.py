@@ -1,0 +1,42 @@
+"""Production mesh construction (dry-run contract).
+
+``make_production_mesh`` is a FUNCTION — importing this module never
+touches jax device state. The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE any jax
+import (see launch/dryrun.py); everything else in the repo sees the real
+single CPU device.
+
+Axis semantics (DESIGN.md §5):
+  pod   — slow tier (DCN between pods). SHIRO's inter-group axis.
+  data  — fast tier (ICI inside a pod). Batch + FSDP + SHIRO intra-group.
+  model — tensor/expert parallelism.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+__all__ = ["make_production_mesh", "make_mesh", "make_spmm_mesh"]
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """jax.make_mesh with explicit Auto axis types (silences 0.9 warning)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_spmm_mesh(P: int, groups: Optional[int] = None) -> Mesh:
+    """Mesh for the SHIRO SpMM executors: flat (x,) or two-tier (g, l)."""
+    if groups is None:
+        return make_mesh((P,), ("x",))
+    if P % groups:
+        raise ValueError(f"P={P} not divisible by groups={groups}")
+    return make_mesh((groups, P // groups), ("g", "l"))

@@ -1,0 +1,89 @@
+"""Shape suite + ShapeDtypeStruct input specs for every (arch × shape) cell.
+
+The four assigned input shapes (see the assignment block):
+  train_4k     seq 4096  × global_batch 256  → train_step
+  prefill_32k  seq 32768 × global_batch 32   → prefill (serve) step
+  decode_32k   seq 32768 × global_batch 128  → decode step (1 new token,
+                                               cache length = seq)
+  long_500k    seq 524288 × global_batch 1   → decode step; SUB-QUADRATIC
+               ONLY (ssm/hybrid); full-attention archs are SKIPped.
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs —
+no device allocation ever happens for the full configs (dry-run contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import DistContext
+from ..models.config import ModelConfig
+from ..models.transformer import init_decode_cache, init_params
+from ..optim.adamw import adamw_init
+
+__all__ = ["SHAPES", "ShapeSpec", "cell_status", "input_specs",
+           "abstract_params", "abstract_opt_state", "abstract_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_status(cfg: ModelConfig, shape: ShapeSpec) -> str:
+    """'run' or 'SKIP(reason)' per the assignment rules."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "SKIP(full-attention)"
+    return "run"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(adamw_init, abstract_params(cfg))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(
+        partial(init_decode_cache, cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model-input stand-ins for one cell (excluding params/opt/cache)."""
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.mode in ("train", "prefill"):
+        s_tok = s
+        out: Dict[str, Any] = {}
+        if cfg.family == "encdec":
+            out["enc_embeds"] = _sds((b, cfg.frontend_len, d), cfg.dtype)
+        elif cfg.frontend is not None:
+            # modality prefix counts toward the sequence budget
+            s_tok = max(s - cfg.frontend_len, 1)
+            out["prefix_embeds"] = _sds((b, cfg.frontend_len, d), cfg.dtype)
+        out["tokens"] = _sds((b, s_tok), jnp.int32)
+        return out
+    # decode: one new token; cache sized to hold seq_len + 1
+    return {"token": _sds((b, 1), jnp.int32)}

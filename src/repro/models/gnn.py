@@ -1,0 +1,79 @@
+"""GCN on SHIRO distributed SpMM — the paper's end-to-end case study (§7.6).
+
+Full-batch GCN training: each layer is ``H' = act(Â · H · W)`` where Â is
+the normalized adjacency. The aggregation Â·H is exactly the distributed
+SpMM the paper optimizes; this module runs it through either the flat or
+the hierarchical SHIRO executor so the Table-3 benchmark can measure
+communication volume and modeled speedup end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from ..core.dist_spmm import (
+    FlatExecPlan, HierExecPlan, coo_spmm_local, flat_spmm, hier_spmm,
+)
+from ..core.planner import build_plan
+from ..core.sparse import CSRMatrix, csr_from_coo, COOMatrix
+
+__all__ = ["normalize_adjacency", "GCN", "gcn_forward", "gcn_loss"]
+
+
+def normalize_adjacency(a: CSRMatrix, add_self_loops: bool = True) -> CSRMatrix:
+    """Â = D^{-1/2} (A + I) D^{-1/2} (Kipf-Welling)."""
+    coo = a.to_coo()
+    rows, cols, vals = coo.row, coo.col, np.abs(coo.val)
+    if add_self_loops:
+        n = a.shape[0]
+        rows = np.concatenate([rows, np.arange(n, dtype=np.int32)])
+        cols = np.concatenate([cols, np.arange(n, dtype=np.int32)])
+        vals = np.concatenate([vals, np.ones(n, np.float32)])
+    deg = np.zeros(a.shape[0], np.float64)
+    np.add.at(deg, rows, vals)
+    dinv = 1.0 / np.sqrt(np.maximum(deg, 1e-12))
+    vals = vals * dinv[rows] * dinv[cols]
+    return csr_from_coo(COOMatrix(a.shape, rows, cols, vals.astype(np.float32)))
+
+
+@dataclasses.dataclass
+class GCN:
+    """Config + static plan holder for a SHIRO-backed GCN."""
+
+    n_nodes: int
+    feat_dim: int
+    hidden: int
+    n_classes: int
+    n_layers: int = 2
+
+    def init(self, key) -> List[dict]:
+        dims = [self.feat_dim] + [self.hidden] * (self.n_layers - 1) + [self.n_classes]
+        ks = jax.random.split(key, self.n_layers)
+        return [
+            {"w": jax.random.normal(ks[i], (dims[i], dims[i + 1])) * (dims[i] ** -0.5),
+             "b": jnp.zeros((dims[i + 1],))}
+            for i in range(self.n_layers)
+        ]
+
+
+def gcn_forward(params: List[dict], feats: jax.Array, spmm_fn) -> jax.Array:
+    """spmm_fn(H) -> Â·H (any SHIRO executor, closed over plan+mesh)."""
+    h = feats
+    for i, lp in enumerate(params):
+        h = spmm_fn(h @ lp["w"] + lp["b"])
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def gcn_loss(params: List[dict], feats: jax.Array, labels: jax.Array,
+             spmm_fn) -> jax.Array:
+    logits = gcn_forward(params, feats, spmm_fn).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], 1)[:, 0]
+    return jnp.mean(logz - gold)

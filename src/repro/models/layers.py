@@ -1,0 +1,344 @@
+"""Common transformer layers: norms, RoPE, GQA attention, MLP.
+
+All functions are pure (params-in, activations-out) and shape-polymorphic
+over batch/sequence. Sharding is applied by the caller via
+``with_sharding_constraint`` using the rules in ``repro.distributed``.
+
+Attention supports three modes used by the shape suite:
+  * train/prefill: full causal attention over the given sequence;
+  * decode: one query token against a KV cache (static cache length);
+  * cross: encoder-decoder attention (no causal mask).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm", "layer_norm", "rope", "attention", "attention_decode",
+    "mlp", "init_attn_params", "init_mlp_params", "KVCache",
+]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale + bias
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embeddings. x: [..., S, H, hd], positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """Static-length KV cache for decode. k/v: [B, kv_heads, S_max, hd]."""
+
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # [] int32, tokens currently valid
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1).transpose(0, 2, 1, 3)  # [B,H,S,hd]
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    b, kvh, s, hd = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, kvh, groups, s, hd)).reshape(
+        b, kvh * groups, s, hd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_chunk: int = 512,
+                    kv_chunk: int = 1024) -> jax.Array:
+    """Memory-O(S·chunk) chunked attention with online softmax.
+
+    q: [B, H, S, hd]; k, v: [B, KVH, Skv, hd] (GQA: KVH divides H; KV is
+    never materialized repeated — queries are grouped instead).
+    Without this, 32k-sequence prefill would materialize S×S logits
+    (hundreds of GB/device); with it the live set per step is
+    B·H·q_chunk·kv_chunk. Double lax.scan (q chunks × kv chunks) keeps the
+    HLO O(1) in sequence length for the dry-run.
+    """
+    b, h, s, hd = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, skv)
+    if s % qc or skv % kc:
+        qc, kc = s, skv  # odd smoke shapes: single chunk
+    nq, nk = s // qc, skv // kc
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(b, kvh, g, s, hd)
+    neg = jnp.asarray(-0.7 * jnp.finfo(jnp.float32).max, jnp.float32)
+
+    def q_step(_, qi):
+        qblk = jax.lax.dynamic_slice_in_dim(qg, qi * qc, qc, 3)  # [B,KVH,G,qc,hd]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, 2)
+            vblk = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, 2)
+            logit = jnp.einsum("bkgqd,bkcd->bkgqc", qblk, kblk) * scale
+            logit = logit.astype(jnp.float32)
+            if causal:
+                qpos = qi * qc + jnp.arange(qc) + (skv - s)  # cache offset
+                kpos = ki * kc + jnp.arange(kc)
+                mask = qpos[:, None] >= kpos[None, :]
+                logit = jnp.where(mask[None, None, None], logit, neg)
+            m_new = jnp.maximum(m, logit.max(-1))
+            p = jnp.exp(logit - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p.astype(v.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, qc), neg, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))  # [nq,B,KVH,G,qc,hd]
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, h, s, hd)
+    return out
+
+
+def attention(
+    params: dict,
+    x: jax.Array,  # [B, S, D]
+    n_heads: int,
+    n_kv_heads: int,
+    *,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    kv_input: Optional[jax.Array] = None,  # cross-attention source [B, Se, D]
+    rope_theta: float = 10000.0,
+    use_rope: bool = True,
+) -> jax.Array:
+    """Full (train/prefill/cross) GQA attention."""
+    b, s, d = x.shape
+    q = x @ params["wq"]
+    src = kv_input if kv_input is not None else x
+    k = src @ params["wk"]
+    v = src @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = _split_heads(q, n_heads)
+    k = _split_heads(k, n_kv_heads)
+    v = _split_heads(v, n_kv_heads)
+    if use_rope and kv_input is None:
+        pos = positions if positions is not None else jnp.arange(s)[None, :]
+        q = rope(q.transpose(0, 2, 1, 3), pos, rope_theta).transpose(0, 2, 1, 3)
+        k = rope(k.transpose(0, 2, 1, 3), pos, rope_theta).transpose(0, 2, 1, 3)
+    if s >= 1024:  # memory-safe path for long sequences (always correct)
+        out = flash_attention(q, k, v, causal=(causal and kv_input is None))
+        return _merge_heads(out) @ params["wo"]
+    groups = n_heads // n_kv_heads
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = params["wq"].shape[-1] // n_heads
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(scale))
+    if causal and kv_input is None:
+        sk = k.shape[2]
+        mask = jnp.tril(jnp.ones((s, sk), bool), k=sk - s)
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    return _merge_heads(out) @ params["wo"]
+
+
+def attention_decode(
+    params: dict,
+    x: jax.Array,  # [B, 1, D] — single new token
+    cache: KVCache,
+    n_heads: int,
+    n_kv_heads: int,
+    *,
+    rope_theta: float = 10000.0,
+    dist=None,
+    seq_shard: bool = False,
+) -> Tuple[jax.Array, KVCache]:
+    """One decode step against a static-length KV cache."""
+    b, s, d = x.shape
+    assert s == 1
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    pos = cache.length[None, None]  # [1,1]
+    q = _split_heads(q, n_heads)
+    kn = _split_heads(k, n_kv_heads)
+    vn = _split_heads(v, n_kv_heads)
+    q = rope(q.transpose(0, 2, 1, 3), pos, rope_theta).transpose(0, 2, 1, 3)
+    kn = rope(kn.transpose(0, 2, 1, 3), pos, rope_theta).transpose(0, 2, 1, 3)
+    if seq_shard and dist is not None and dist.model_size > 1:
+        out, new_cache = attention_decode_seqshard(
+            q, kn, vn, cache, dist=dist,
+            n_heads=n_heads, n_kv_heads=n_kv_heads)
+        return _merge_heads(out) @ params["wo"], new_cache
+    k_all = jax.lax.dynamic_update_slice(
+        cache.k, kn.astype(cache.k.dtype), (0, 0, cache.length, 0))
+    v_all = jax.lax.dynamic_update_slice(
+        cache.v, vn.astype(cache.v.dtype), (0, 0, cache.length, 0))
+    groups = n_heads // n_kv_heads
+    kk = _repeat_kv(k_all, groups)
+    vv = _repeat_kv(v_all, groups)
+    scale = params["wq"].shape[-1] // n_heads
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk) / jnp.sqrt(float(scale))
+    smax = kk.shape[2]
+    valid = jnp.arange(smax)[None, None, None, :] <= cache.length
+    logits = jnp.where(valid, logits, jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv)
+    y = _merge_heads(out) @ params["wo"]
+    new_cache = KVCache(k_all, v_all, cache.length + 1)
+    return y, new_cache
+
+
+def attention_decode_seqshard(
+    q: jax.Array,  # [B, H, 1, hd] (heads replicated or model-sharded)
+    kn: jax.Array,  # [B, kvh, 1, hd] new-token K
+    vn: jax.Array,
+    cache: KVCache,  # k/v [B, kvh, Smax, hd], LENGTH dim sharded on model
+    *,
+    dist,
+    n_heads: int,
+    n_kv_heads: int,
+):
+    """Flash-decoding: KV cache sharded along LENGTH over the model axis.
+
+    GSPMD cannot partition a dynamic-update-slice on the sharded dimension
+    (it falls back to full rematerialization — measured in §Perf iteration
+    A2), so this is an explicit shard_map: each model rank owns a
+    contiguous 1/M of the context, updates it only if the write position
+    falls in its range, computes PARTIAL softmax statistics (m, l, acc)
+    over its slice, and the partials combine with pmax/psum — the classic
+    flash-decoding reduction. Per-chip cache traffic drops by M.
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh, m_ax = dist.mesh, dist.model_axis
+    b_ax = dist.batch_axes
+    groups = n_heads // n_kv_heads
+
+    def body(q_, kn_, vn_, kc, vc, length):
+        s_loc = kc.shape[2]
+        rank = jax.lax.axis_index(m_ax)
+        start = rank * s_loc
+        off = jnp.clip(length - start, 0, s_loc - 1)
+        in_range = (length >= start) & (length < start + s_loc)
+        kc_new = jax.lax.dynamic_update_slice(kc, kn_.astype(kc.dtype),
+                                              (0, 0, off, 0))
+        vc_new = jax.lax.dynamic_update_slice(vc, vn_.astype(vc.dtype),
+                                              (0, 0, off, 0))
+        kc = jnp.where(in_range, kc_new, kc)
+        vc = jnp.where(in_range, vc_new, vc)
+
+        kk = _repeat_kv(kc, groups)
+        vv = _repeat_kv(vc, groups)
+        hd = q_.shape[-1]
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q_, kk) / jnp.sqrt(float(hd))
+        logits = logits.astype(jnp.float32)
+        pos = start + jnp.arange(s_loc)
+        valid = pos[None, None, None, :] <= length
+        neg = jnp.asarray(-0.7 * jnp.finfo(jnp.float32).max)
+        logits = jnp.where(valid, logits, neg)
+        m_loc = logits.max(-1)  # [B,H,1]
+        p = jnp.exp(logits - m_loc[..., None])
+        l_loc = p.sum(-1)
+        acc_loc = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vv.dtype), vv)
+        # combine partials across the model axis (flash-decoding reduction)
+        m_glob = jax.lax.pmax(m_loc, m_ax)
+        corr = jnp.exp(m_loc - m_glob)
+        l_glob = jax.lax.psum(l_loc * corr, m_ax)
+        acc_glob = jax.lax.psum(acc_loc * corr[..., None].astype(acc_loc.dtype),
+                                m_ax)
+        out = acc_glob / jnp.maximum(l_glob[..., None], 1e-30).astype(acc_glob.dtype)
+        return out.astype(q_.dtype), kc, vc
+
+    rep4 = P(b_ax, None, None, None)
+    cache_spec = P(b_ax, None, m_ax, None)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(rep4, rep4, rep4, cache_spec, cache_spec, P()),
+                   out_specs=(rep4, cache_spec, cache_spec),
+                   check_vma=False)
+    out, k_new, v_new = fn(q, kn, vn, cache.k, cache.v, cache.length)
+    return out, KVCache(k_new, v_new, cache.length + 1)
+
+
+def mlp(params: dict, x: jax.Array, kind: str = "swiglu") -> jax.Array:
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])) @ params["w2"]
+    return jax.nn.gelu(x @ params["w1"]) @ params["w2"]
+
+
+# ---------------------------------------------------------------------------
+# initializers (smoke tests / examples; dry-run uses ShapeDtypeStructs)
+# ---------------------------------------------------------------------------
+
+
+def init_attn_params(key, d_model: int, n_heads: int, n_kv_heads: int,
+                     head_dim: int, qkv_bias: bool, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sc = d_model ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d_model, n_heads * head_dim)) * sc).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, n_kv_heads * head_dim)) * sc).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, n_kv_heads * head_dim)) * sc).astype(dtype),
+        "wo": (jax.random.normal(k4, (n_heads * head_dim, d_model)) * sc).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, kind: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    sc = d_model ** -0.5
+    p = {
+        "w1": (jax.random.normal(k1, (d_model, d_ff)) * sc).astype(dtype),
+        "w2": (jax.random.normal(k2, (d_ff, d_model)) * (d_ff ** -0.5)).astype(dtype),
+    }
+    if kind == "swiglu":
+        p["w3"] = (jax.random.normal(k3, (d_model, d_ff)) * sc).astype(dtype)
+    return p

@@ -1,0 +1,243 @@
+"""Mixture-of-Experts layer with SHIRO-planned expert-parallel dispatch.
+
+The token→expert exchange in expert parallelism is a distributed SpMM: the
+dispatch matrix (tokens × expert-slots) is sparse, activations are the
+dense matrix. SHIRO's two ideas map directly (DESIGN.md §4):
+
+* column-based redundancy — with top_k > 1, a token routed to two experts
+  that live on the SAME expert-parallel rank is classically sent twice.
+  ``shiro_dispatch`` de-duplicates: one activation row per (token, rank),
+  accompanied by per-expert index/gate lists (paper §6.1.2's de-duplicated
+  B-row fetch, applied per rank instead of per group).
+* row-based pre-aggregation — expert outputs for the same token are
+  weighted and PRE-AGGREGATED on the expert rank into a single partial
+  row before the return all_to_all (paper's partial-C aggregation), so the
+  combine volume is also one row per (token, rank).
+
+Against the classic per-assignment exchange this cuts both directions from
+``top_k`` rows/token to ``unique-ranks``/token — the MoE analogue of the
+paper's μ ≤ min(|Rows|, |Cols|) dominance argument.
+
+Both paths (classic / shiro) are implemented for the ablation benchmark.
+The layer is pure-SPMD via ``shard_map`` over the full mesh: batch sharded
+on (pod, data), experts on the model axis, all_to_all on the model axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..distributed.context import DistContext
+from .config import ModelConfig
+
+__all__ = ["init_moe_params", "moe_layer", "moe_comm_rows"]
+
+
+def init_moe_params(key, cfg: ModelConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    return {
+        "router": (jax.random.normal(ks[0], (d, e)) * sc).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, f)) * sc).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (e, d, f)) * sc).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (e, f, d)) * (f ** -0.5)).astype(dtype),
+    }
+
+
+def _top_k_gates(logits: jax.Array, k: int):
+    """Renormalized top-k gates. logits [T, E] -> (gates [T,k], ids [T,k])."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, ids = jax.lax.top_k(probs, k)
+    gates = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    return gates, ids
+
+
+def _expert_ffn(w1, w3, w2, x):
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def moe_layer(params: dict, x: jax.Array, cfg: ModelConfig,
+              dist: Optional[DistContext]) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D]."""
+    if dist is None or dist.model_size == 1 or cfg.n_experts % dist.model_size:
+        return _moe_dense(params, x, cfg)
+    return _moe_ep(params, x, cfg, dist, shiro=cfg.shiro_dispatch)
+
+
+def _moe_dense(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Reference path (smoke tests / single device): all experts, dense."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    gates, ids = _top_k_gates(xt @ params["router"], cfg.top_k)
+    dense_gates = jnp.zeros((t, cfg.n_experts), jnp.float32)
+    dense_gates = dense_gates.at[jnp.arange(t)[:, None], ids].add(gates)
+    outs = jax.vmap(_expert_ffn, in_axes=(0, 0, 0, None))(
+        params["w1"], params["w3"], params["w2"], xt)  # [E, T, D]
+    y = jnp.einsum("te,etd->td", dense_gates.astype(x.dtype), outs)
+    return y.reshape(b, s, d)
+
+
+def _moe_ep(params: dict, x: jax.Array, cfg: ModelConfig,
+            dist: DistContext, shiro: bool) -> jax.Array:
+    """Expert-parallel path via shard_map over the full mesh."""
+    from jax import shard_map
+
+    mesh = dist.mesh
+    m_ax = dist.model_axis
+    M = dist.model_size
+    e_loc = cfg.n_experts // M
+    b, s, d = x.shape
+    t_loc = (b // dist.batch_size_divisor) * s
+    # capacity per (src rank, dst rank) activation buffer
+    rows_per_token = cfg.top_k
+    if shiro and cfg.shiro_capacity:
+        # expected unique destination ranks per token under dedup:
+        # E[unique] = M*(1 - (1 - 1/M)^k) < k — SHIRO's dominance bound
+        # applied to buffer sizing (EXPERIMENTS.md §Perf). capacity_factor
+        # absorbs the variance; overflow falls back to token dropping.
+        rows_per_token = M * (1.0 - (1.0 - 1.0 / M) ** cfg.top_k)
+    cap = max(8, int(t_loc * rows_per_token / M * cfg.capacity_factor))
+    # per-expert index capacity
+    cap_e = max(8, int(t_loc * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+
+    body = functools.partial(
+        _moe_ep_body, cfg=cfg, m_axis=m_ax, M=M, e_loc=e_loc,
+        cap=cap, cap_e=cap_e, shiro=shiro)
+    bspec = P(dist.batch_axes, None, None)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(bspec, P(), P(m_ax, None, None), P(m_ax, None, None),
+                  P(m_ax, None, None)),
+        out_specs=bspec, check_vma=False)
+    return fn(x, params["router"], params["w1"], params["w3"], params["w2"])
+
+
+def _moe_ep_body(x, router, w1, w3, w2, *, cfg, m_axis, M, e_loc, cap,
+                 cap_e, shiro):
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    gates, ids = _top_k_gates(xt @ router, cfg.top_k)  # [T,K]
+    dst = ids // e_loc  # destination EP rank per assignment
+    le = ids % e_loc  # local expert on that rank
+    k = cfg.top_k
+
+    if shiro:
+        # --- column-based dedup: send each (token, rank) pair once -----
+        dup = jnp.zeros((t, k), bool)
+        for i in range(1, k):
+            same = jnp.stack([dst[:, j] == dst[:, i] for j in range(i)], 0).any(0)
+            dup = dup.at[:, i].set(same)
+        send_mask = ~dup  # [T,K] — the de-duplicated (token, rank) pairs
+    else:
+        send_mask = jnp.ones((t, k), bool)
+
+    flat_dst = dst.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    flat_send = send_mask.reshape(-1)
+
+    # slot of each SENT pair within its destination-rank buffer
+    onehot_dst = (flat_dst[:, None] == jnp.arange(M)[None, :]) & flat_send[:, None]
+    slot_in_dst = jnp.cumsum(onehot_dst, axis=0) - 1  # [T*K, M]
+    send_slot = jnp.take_along_axis(slot_in_dst, flat_dst[:, None], 1)[:, 0]
+    send_ok = flat_send & (send_slot < cap)
+
+    # activation send buffer [M, cap, D] + token map for the return scatter.
+    # Optional fp8 dispatch (cfg.moe_dispatch_dtype): halves buffer HBM
+    # traffic and all_to_all bytes; expert compute casts back to x.dtype.
+    disp_dt = (jnp.dtype(cfg.moe_dispatch_dtype)
+               if cfg.moe_dispatch_dtype != "none" else x.dtype)
+    buf = jnp.zeros((M, cap, d), disp_dt)
+    tok_map = jnp.full((M, cap), -1, jnp.int32)
+    widx = (jnp.where(send_ok, flat_dst, M), jnp.where(send_ok, send_slot, 0))
+    buf = buf.at[widx[0], widx[1]].add(
+        jnp.where(send_ok[:, None], xt[flat_tok], 0.0).astype(disp_dt),
+        mode="drop")
+    tok_map = tok_map.at[widx[0], widx[1]].max(
+        jnp.where(send_ok, flat_tok, -1).astype(jnp.int32), mode="drop")
+
+    # per-assignment: the slot its token occupies for its destination rank
+    # (for dups, the slot of the FIRST assignment with the same dst)
+    pair_slot = send_slot.reshape(t, k)
+    if shiro:
+        for i in range(1, k):
+            for j in range(i):
+                match = (dst[:, j] == dst[:, i]) & dup[:, i]
+                pair_slot = pair_slot.at[:, i].set(
+                    jnp.where(match, pair_slot[:, j], pair_slot[:, i]))
+    assign_slot = pair_slot.reshape(-1)
+    assign_ok = assign_slot < cap
+    if not shiro:
+        assign_ok = assign_ok & flat_send
+
+    # per-(dst, local-expert) index/gate lists [M, e_loc, cap_e]
+    flat_le = le.reshape(-1)
+    pair_key = flat_dst * e_loc + flat_le
+    onehot_exp = (pair_key[:, None] == jnp.arange(M * e_loc)[None, :]) & assign_ok[:, None]
+    eslot = jnp.cumsum(onehot_exp, axis=0) - 1
+    exp_slot = jnp.take_along_axis(eslot, pair_key[:, None], 1)[:, 0]
+    exp_ok = assign_ok & (exp_slot < cap_e)
+    exp_idx = jnp.full((M, e_loc, cap_e), -1, jnp.int32)
+    exp_gate = jnp.zeros((M, e_loc, cap_e), jnp.float32)
+    ewid = (jnp.where(exp_ok, flat_dst, M),
+            jnp.where(exp_ok, flat_le, 0),
+            jnp.where(exp_ok, exp_slot, 0))
+    exp_idx = exp_idx.at[ewid].max(
+        jnp.where(exp_ok, assign_slot, -1).astype(jnp.int32), mode="drop")
+    exp_gate = exp_gate.at[ewid].add(
+        jnp.where(exp_ok, gates.reshape(-1), 0.0), mode="drop")
+
+    # ---- all_to_all: activations + per-expert metadata -----------------
+    recv_buf = jax.lax.all_to_all(buf, m_axis, 0, 0, tiled=False)  # [M,cap,D]
+    recv_idx = jax.lax.all_to_all(exp_idx, m_axis, 0, 0, tiled=False)
+    recv_gate = jax.lax.all_to_all(exp_gate, m_axis, 0, 0, tiled=False)
+
+    # ---- expert compute + row-based pre-aggregated combine -------------
+    flat_recv = recv_buf.reshape(M * cap, d).astype(x.dtype)
+    combine = jnp.zeros((M * cap, d), x.dtype)
+    for e in range(e_loc):
+        idx = recv_idx[:, e]  # [M, cap_e] slots into each source's buffer
+        gate = recv_gate[:, e]  # [M, cap_e]
+        flat_idx = (jnp.arange(M)[:, None] * cap + jnp.maximum(idx, 0)).reshape(-1)
+        xin = flat_recv[flat_idx]  # [M*cap_e, D]
+        yout = _expert_ffn(w1[e], w3[e], w2[e], xin)
+        yout = yout * (gate.reshape(-1)[:, None].astype(x.dtype))
+        yout = jnp.where((idx.reshape(-1) >= 0)[:, None], yout, 0.0)
+        # pre-aggregation: partials for the same token row sum HERE,
+        # before the return transfer (SHIRO row-based strategy).
+        combine = combine.at[flat_idx].add(yout)
+
+    # ---- return all_to_all + scatter into token order ------------------
+    recv_comb = jax.lax.all_to_all(
+        combine.reshape(M, cap, d), m_axis, 0, 0, tiled=False)
+    y = jnp.zeros((t, d), x.dtype)
+    tm = tok_map.reshape(-1)
+    y = y.at[jnp.maximum(tm, 0)].add(
+        jnp.where((tm >= 0)[:, None], recv_comb.reshape(M * cap, d), 0.0))
+    return y.reshape(b, s, d)
+
+
+def moe_comm_rows(cfg: ModelConfig, tokens: int, M: int, seed: int = 0):
+    """Analytic dispatch-volume comparison (rows sent) classic vs SHIRO.
+
+    Monte-Carlo over a uniform router: classic sends top_k rows/token;
+    SHIRO sends |unique ranks|/token. Returns (classic, shiro) row counts.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    e_loc = cfg.n_experts // M
+    ids = np.stack([
+        rng.choice(cfg.n_experts, size=cfg.top_k, replace=False)
+        for _ in range(tokens)
+    ])
+    dst = ids // e_loc
+    classic = dst.size
+    shiro = sum(len(np.unique(row)) for row in dst)
+    return classic, shiro

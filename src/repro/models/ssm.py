@@ -1,0 +1,234 @@
+"""Mamba1 selective scan and Mamba2 SSD blocks (TPU adaptation).
+
+The CUDA selective-scan kernel keeps the (d_inner × d_state) per-token
+expansion in SRAM; the TPU-native equivalent is a CHUNKED scan
+(DESIGN.md §2): ``lax.scan`` over sequence chunks carrying the recurrent
+state [B, d_inner, d_state], with a parallel ``associative_scan`` inside
+each chunk. The expansion is materialized only per chunk
+(B·Q·d_inner·d_state, d_inner sharded over the model axis), which bounds
+VMEM/HBM pressure at any sequence length — this is what makes the
+``long_500k`` decode shape feasible for falcon-mamba / zamba2.
+
+Decode is a single recurrence update: O(1) state, no cache growth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+__all__ = [
+    "SSMState", "init_mamba_params", "mamba_block", "mamba_block_decode",
+    "init_ssm_state",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSMState:
+    """Recurrent state for one SSM layer."""
+
+    h: jax.Array  # mamba1: [B, d_inner, d_state]; mamba2: [B, nh, hd, d_state]
+    conv: jax.Array  # [B, conv_w - 1, d_inner] rolling conv inputs
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(cfg.d_model // 16, 1)
+
+
+def init_mamba_params(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, st, cw = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    sc = d ** -0.5
+    # xi/z projections stored SEPARATELY (not one [d, 2*di] tensor): a
+    # fused tensor's jnp.split on the TP-sharded output forces a 2x[B,S,di]
+    # collective-permute per layer (measured in §Perf iteration B3/B4);
+    # separate params are natively sharded on their own output columns.
+    kz = jax.random.split(ks[5], 2)[0]
+    p = {
+        "in_proj_x": (jax.random.normal(ks[0], (d, di)) * sc).astype(dtype),
+        "in_proj_z": (jax.random.normal(kz, (d, di)) * sc).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cw, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (di, d)) * (di ** -0.5)).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+    }
+    if cfg.ssm_version == 1:
+        dtr = _dt_rank(cfg)
+        # fused variant (cfg.ssm_fused_proj): dbl computed from the block
+        # input x (d_model contraction, replicated under TP -> no psum)
+        dbl_in = d if cfg.ssm_fused_proj else di
+        p.update({
+            "x_dbl": (jax.random.normal(ks[3], (dbl_in, dtr + 2 * st)) * (dbl_in ** -0.5)).astype(dtype),
+            "dt_proj": (jax.random.normal(ks[4], (dtr, di)) * (dtr ** -0.5)).astype(dtype),
+            "dt_bias": jnp.zeros((di,), dtype),
+            "A_log": jnp.log(jnp.broadcast_to(
+                jnp.arange(1, st + 1, dtype=jnp.float32), (di, st))).astype(jnp.float32),
+        })
+    else:
+        nh = cfg.ssm_heads or max(di // 64, 1)
+        p.update({
+            "bc_proj": (jax.random.normal(ks[3], (d, 2 * st)) * sc).astype(dtype),
+            "dt_proj2": (jax.random.normal(ks[4], (d, nh)) * sc).astype(dtype),
+            "dt_bias": jnp.zeros((nh,), dtype),
+            "A_log": jnp.log(jnp.ones((nh,), jnp.float32) * 2.0),
+        })
+    return p
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    di, st, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    if cfg.ssm_version == 1:
+        h = jnp.zeros((batch, di, st), jnp.float32)
+    else:
+        nh = cfg.ssm_heads or max(di // 64, 1)
+        h = jnp.zeros((batch, nh, di // nh, st), jnp.float32)
+    return SSMState(h=h, conv=jnp.zeros((batch, cw - 1, di), dtype))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prepend: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. x: [B,S,di], w: [cw,di]."""
+    cw = w.shape[0]
+    xp = jnp.concatenate([prepend, x], axis=1)  # [B, S+cw-1, di]
+    out = jnp.zeros_like(x)
+    for i in range(cw):  # cw is tiny (4); unrolled adds, no conv primitive
+        out = out + xp[:, i : i + x.shape[1]] * w[i]
+    return out + b
+
+
+def _assoc_scan(da: jax.Array, dbx: jax.Array, h0: jax.Array):
+    """Within-chunk linear recurrence h_t = da_t*h_{t-1} + dbx_t.
+
+    da/dbx: [B, Q, ...]; h0: [B, ...]. Returns (h_all [B,Q,...], h_last).
+    Fold h0 into the first element, then associative-scan the affine maps.
+    """
+    dbx = dbx.at[:, 0].add(da[:, 0] * h0)
+
+    def op(l, r):
+        (la, lb), (ra, rb) = l, r
+        return la * ra, rb + ra * lb
+
+    a_s, b_s = jax.lax.associative_scan(op, (da, dbx), axis=1)
+    return b_s, b_s[:, -1]
+
+
+def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence Mamba block (training / prefill). x: [B, S, D]."""
+    b, s, d = x.shape
+    di, st = cfg.d_inner, cfg.ssm_state
+    q = min(cfg.ssm_chunk, s)
+    if s % q:
+        q = s  # fall back to a single chunk for odd smoke shapes
+    xi = x @ params["in_proj_x"]
+    z = x @ params["in_proj_z"]
+    xi = _causal_conv(xi, params["conv_w"], params["conv_b"],
+                      jnp.zeros((b, cfg.ssm_conv - 1, di), xi.dtype))
+    xi = jax.nn.silu(xi)
+
+    if cfg.ssm_version == 1:
+        dtr = _dt_rank(cfg)
+        # faithful mamba1: dbl from conv output xi (contraction over the
+        # TP-sharded d_inner -> per-layer all-reduce). Fused variant: dbl
+        # from x (replicated d_model -> collective-free), see config.
+        dbl_src = x if cfg.ssm_fused_proj else xi
+        dbl = dbl_src @ params["x_dbl"]  # [B,S,dtr+2st]
+        dt = jax.nn.softplus(dbl[..., :dtr] @ params["dt_proj"] + params["dt_bias"])
+        bmat = dbl[..., dtr : dtr + st]
+        cmat = dbl[..., dtr + st :]
+        a = -jnp.exp(params["A_log"])  # [di, st]
+
+        def chunk_step(h, inp):
+            xc, dtc, bc, cc = inp  # [B,Q,di],[B,Q,di],[B,Q,st],[B,Q,st]
+            da = jnp.exp(dtc[..., None].astype(jnp.float32) * a)  # [B,Q,di,st]
+            dbx = (dtc * xc)[..., None].astype(jnp.float32) * bc[..., None, :].astype(jnp.float32)
+            h_all, h_last = _assoc_scan(da, dbx, h)
+            y = jnp.einsum("bqds,bqs->bqd", h_all, cc.astype(jnp.float32))
+            return h_last, y.astype(x.dtype)
+
+        h0 = jnp.zeros((b, di, st), jnp.float32)
+        xs = (xi.reshape(b, s // q, q, di).transpose(1, 0, 2, 3),
+              dt.reshape(b, s // q, q, di).transpose(1, 0, 2, 3),
+              bmat.reshape(b, s // q, q, st).transpose(1, 0, 2, 3),
+              cmat.reshape(b, s // q, q, st).transpose(1, 0, 2, 3))
+        _, ys = jax.lax.scan(chunk_step, h0, xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    else:
+        nh = cfg.ssm_heads or max(di // 64, 1)
+        hd = di // nh
+        bc = x @ params["bc_proj"]
+        bmat, cmat = jnp.split(bc, 2, axis=-1)  # [B,S,st] each
+        dt = jax.nn.softplus(x @ params["dt_proj2"] + params["dt_bias"])  # [B,S,nh]
+        a = -jnp.exp(params["A_log"])  # [nh]
+
+        def chunk_step(h, inp):
+            xc, dtc, bc_, cc = inp  # [B,Q,di],[B,Q,nh],[B,Q,st],[B,Q,st]
+            xh = xc.reshape(xc.shape[0], xc.shape[1], nh, hd)
+            da = jnp.exp(dtc.astype(jnp.float32) * a)  # [B,Q,nh]
+            da4 = da[..., None, None]  # [B,Q,nh,1,1]
+            dbx = (dtc[..., None] * xh)[..., None].astype(jnp.float32) \
+                * bc_[..., None, None, :].astype(jnp.float32)  # [B,Q,nh,hd,st]
+            h_all, h_last = _assoc_scan(da4, dbx, h)
+            y = jnp.einsum("bqhds,bqs->bqhd", h_all, cc.astype(jnp.float32))
+            return h_last, y.reshape(xc.shape[0], xc.shape[1], di).astype(x.dtype)
+
+        h0 = jnp.zeros((b, nh, hd, st), jnp.float32)
+        xs = (xi.reshape(b, s // q, q, di).transpose(1, 0, 2, 3),
+              dt.reshape(b, s // q, q, nh).transpose(1, 0, 2, 3),
+              bmat.reshape(b, s // q, q, st).transpose(1, 0, 2, 3),
+              cmat.reshape(b, s // q, q, st).transpose(1, 0, 2, 3))
+        _, ys = jax.lax.scan(chunk_step, h0, xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+
+    y = y + xi * params["D"]
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def mamba_block_decode(params: dict, x: jax.Array, state: SSMState,
+                       cfg: ModelConfig) -> Tuple[jax.Array, SSMState]:
+    """Single-token decode step. x: [B, 1, D]."""
+    b = x.shape[0]
+    di, st = cfg.d_inner, cfg.ssm_state
+    xi = x @ params["in_proj_x"]  # [B,1,di]
+    z = x @ params["in_proj_z"]
+    conv_in = jnp.concatenate([state.conv, xi], axis=1)  # [B,cw,di]
+    xi1 = jnp.einsum("bcd,cd->bd", conv_in, params["conv_w"]) + params["conv_b"]
+    xi1 = jax.nn.silu(xi1)  # [B,di]
+    new_conv = conv_in[:, 1:]
+
+    if cfg.ssm_version == 1:
+        dtr = _dt_rank(cfg)
+        dbl_src = x[:, 0] if cfg.ssm_fused_proj else xi1
+        dbl = dbl_src @ params["x_dbl"]
+        dt = jax.nn.softplus(dbl[..., :dtr] @ params["dt_proj"] + params["dt_bias"])
+        bmat = dbl[..., dtr : dtr + st]
+        cmat = dbl[..., dtr + st :]
+        a = -jnp.exp(params["A_log"])
+        da = jnp.exp(dt[..., None].astype(jnp.float32) * a)  # [B,di,st]
+        dbx = (dt * xi1)[..., None].astype(jnp.float32) * bmat[:, None, :].astype(jnp.float32)
+        h = da * state.h + dbx
+        y = jnp.einsum("bds,bs->bd", h, cmat.astype(jnp.float32)).astype(x.dtype)
+    else:
+        nh = cfg.ssm_heads or max(di // 64, 1)
+        hd = di // nh
+        bc = x[:, 0] @ params["bc_proj"]
+        bmat, cmat = jnp.split(bc, 2, axis=-1)
+        dt = jax.nn.softplus(x[:, 0] @ params["dt_proj2"] + params["dt_bias"])
+        a = -jnp.exp(params["A_log"])
+        da = jnp.exp(dt.astype(jnp.float32) * a)  # [B,nh]
+        xh = xi1.reshape(b, nh, hd)
+        dbx = (dt[..., None] * xh)[..., None].astype(jnp.float32) \
+            * bmat[:, None, None, :].astype(jnp.float32)
+        h = da[..., None, None] * state.h + dbx
+        y = jnp.einsum("bhds,bs->bhd", h, cmat.astype(jnp.float32))
+        y = y.reshape(b, di).astype(x.dtype)
+
+    y = y + xi1 * params["D"]
+    y = y * jax.nn.silu(z[:, 0])
+    out = (y @ params["out_proj"])[:, None]
+    return out, SSMState(h=h, conv=new_conv)

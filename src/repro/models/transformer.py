@@ -1,0 +1,376 @@
+"""Unified LM assembly for all assigned architecture families.
+
+Design rules:
+  * scan-over-layers with stacked [L, ...] params — HLO size is O(1) in
+    depth (critical for 64-95-layer archs on the 512-device dry-run);
+  * optional ``jax.checkpoint`` (remat) around each block;
+  * family dispatch inside the block fn: dense / moe / ssm / hybrid /
+    encdec / vlm / audio. Hybrid (zamba2) interleaves a SHARED attention
+    block every ``attn_every`` SSM blocks (outer python loop over groups,
+    inner scan — the shared block has ONE set of weights);
+  * modality archs (audio / vlm) consume precomputed frontend embeddings
+    through a linear adapter (the assignment's stub contract).
+
+Decode paths keep O(1)-per-token state: KV caches for attention archs,
+recurrent SSM states for mamba archs — the latter is what makes the
+``long_500k`` shape runnable (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..distributed.context import DistContext, shard
+from .config import ModelConfig
+from .layers import (
+    KVCache, attention, attention_decode, init_attn_params, init_mlp_params,
+    mlp, rms_norm,
+)
+from .moe import init_moe_params, moe_layer
+from .ssm import (
+    SSMState, init_mamba_params, init_ssm_state, mamba_block,
+    mamba_block_decode,
+)
+
+__all__ = [
+    "init_params", "forward", "DecodeCache", "init_decode_cache",
+    "decode_step", "lm_loss",
+]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, kind: str) -> dict:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"ln1": jnp.ones((d,), dt),
+                "ssm": init_mamba_params(ks[0], cfg, dt)}
+    blk = {
+        "ln1": jnp.ones((d,), dt),
+        "attn": init_attn_params(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim, cfg.qkv_bias, dt),
+        "ln2": jnp.ones((d,), dt),
+    }
+    if kind == "moe":
+        blk["moe"] = init_moe_params(ks[1], cfg, dt)
+    else:
+        blk["mlp"] = init_mlp_params(ks[1], d, cfg.d_ff, cfg.mlp, dt)
+    if kind == "cross":
+        blk["ln3"] = jnp.ones((d,), dt)
+        blk["cross"] = init_attn_params(ks[2], d, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.head_dim, cfg.qkv_bias, dt)
+    return blk
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = _dtype(cfg)
+    d, v = cfg.d_model, cfg.vocab_size
+    keys = jax.random.split(key, cfg.n_layers + cfg.n_enc_layers + 8)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (v, d)) * 0.02).astype(dt),
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(keys[1], (d, v)) * 0.02).astype(dt)
+
+    kind = {"dense": "dense", "vlm": "dense", "audio": "dense",
+            "moe": "moe", "ssm": "ssm", "hybrid": "ssm",
+            "encdec": "cross"}[cfg.family]
+    layer_kind = "moe" if cfg.family == "moe" else kind
+    params["layers"] = _stack([
+        _init_block(keys[2 + i], cfg, layer_kind) for i in range(cfg.n_layers)])
+
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_block(keys[2 + cfg.n_layers], cfg, "dense")
+    if cfg.family == "encdec":
+        params["encoder"] = {
+            "layers": _stack([
+                _init_block(keys[2 + cfg.n_layers + i], cfg, "dense")
+                for i in range(cfg.n_enc_layers)]),
+            "norm": jnp.ones((d,), dt),
+        }
+    if cfg.frontend is not None:
+        params["adapter"] = (
+            jax.random.normal(keys[-1], (d, d)) * (d ** -0.5)).astype(dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(lp: dict, x: jax.Array, cfg: ModelConfig,
+                 dist: Optional[DistContext], kind: str,
+                 enc_out: Optional[jax.Array] = None) -> jax.Array:
+    bspec = None if dist is None else P(dist.batch_axes, None, None)
+    if kind == "ssm":
+        x = x + mamba_block(lp["ssm"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg)
+        return shard(x, dist, bspec)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + attention(lp["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                      causal=(kind != "enc"), rope_theta=cfg.rope_theta)
+    x = shard(x, dist, bspec)
+    if kind == "cross" and enc_out is not None:
+        h = rms_norm(x, lp["ln3"], cfg.norm_eps)
+        x = x + attention(lp["cross"], h, cfg.n_heads, cfg.n_kv_heads,
+                          kv_input=enc_out, causal=False)
+        x = shard(x, dist, bspec)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        x = x + moe_layer(lp["moe"], h, cfg, dist)
+    else:
+        x = x + mlp(lp["mlp"], h, cfg.mlp)
+    return shard(x, dist, bspec)
+
+
+def _scan_layers(layers: dict, x: jax.Array, cfg: ModelConfig,
+                 dist: Optional[DistContext], kind: str,
+                 enc_out: Optional[jax.Array] = None) -> jax.Array:
+    fn = partial(_block_apply, cfg=cfg, dist=dist, kind=kind, enc_out=enc_out)
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+
+    if not cfg.scan_layers:  # unrolled (dry-run cost probes)
+        n = jax.tree_util.tree_leaves(layers)[0].shape[0]
+        for i in range(n):
+            lp = jax.tree_util.tree_map(lambda a: a[i], layers)
+            x = fn(lp, x)
+        return x
+
+    def step(h, lp):
+        return fn(lp, h), None
+
+    x, _ = jax.lax.scan(step, x, layers)
+    return x
+
+
+def forward(params: dict, cfg: ModelConfig, dist: Optional[DistContext],
+            batch: Dict[str, jax.Array]) -> jax.Array:
+    """Returns logits [B, S_total, V].
+
+    batch keys: 'tokens' [B, S]; modality archs add 'prefix_embeds'
+    [B, P, D] (vlm patch / audio frame embeddings from the frontend stub);
+    encdec uses 'enc_embeds' [B, Se, D] for the encoder input.
+    """
+    tokens = batch["tokens"]
+    bspec = None if dist is None else P(dist.batch_axes, None, None)
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    x = shard(x, dist, bspec)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        e = batch["enc_embeds"].astype(_dtype(cfg)) @ params["adapter"]
+        e = shard(e, dist, bspec)
+        e = _scan_layers(params["encoder"]["layers"], e, cfg, dist, "enc")
+        enc_out = rms_norm(e, params["encoder"]["norm"], cfg.norm_eps)
+    elif cfg.frontend is not None and "prefix_embeds" in batch:
+        pre = batch["prefix_embeds"].astype(_dtype(cfg)) @ params["adapter"]
+        x = jnp.concatenate([pre, x], axis=1)
+        x = shard(x, dist, bspec)
+
+    if cfg.family == "hybrid":
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // per
+        layers = params["layers"]
+        for g in range(n_groups):
+            grp = jax.tree_util.tree_map(lambda a: a[g * per:(g + 1) * per], layers)
+            x = _scan_layers(grp, x, cfg, dist, "ssm")
+            x = _block_apply(params["shared_attn"], x, cfg, dist, "dense")
+    else:
+        kind = {"dense": "dense", "vlm": "dense", "audio": "dense",
+                "moe": "dense", "ssm": "ssm", "encdec": "cross"}[cfg.family]
+        x = _scan_layers(params["layers"], x, cfg, dist, kind, enc_out)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    logits = shard(x=logits, dist=dist,
+                   spec=None if dist is None else P(dist.batch_axes, None, "model"))
+    return logits
+
+
+def lm_loss(params: dict, cfg: ModelConfig, dist: Optional[DistContext],
+            batch: Dict[str, jax.Array]) -> jax.Array:
+    """Mean next-token cross-entropy over 'tokens' (prefix positions excluded)."""
+    logits = forward(params, cfg, dist, batch)
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    logits = logits[:, -s:, :]  # drop modality prefix positions
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecodeCache:
+    """Per-model decode state; unused fields are None."""
+
+    k: Optional[jax.Array] = None  # [L, B, kvh, Smax, hd]
+    v: Optional[jax.Array] = None
+    ssm_h: Optional[jax.Array] = None  # [L, B, ...]
+    ssm_conv: Optional[jax.Array] = None  # [L, B, cw-1, di]
+    shared_k: Optional[jax.Array] = None  # hybrid: [n_groups, B, kvh, Smax, hd]
+    shared_v: Optional[jax.Array] = None
+    cross_k: Optional[jax.Array] = None  # encdec: [L, B, kvh, Se, hd]
+    cross_v: Optional[jax.Array] = None
+    length: Optional[jax.Array] = None  # [] int32
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> DecodeCache:
+    dt = _dtype(cfg)
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    c = DecodeCache(length=jnp.zeros((), jnp.int32))
+    if cfg.family in ("dense", "moe", "vlm", "audio", "encdec"):
+        c = dataclasses.replace(
+            c,
+            k=jnp.zeros((cfg.n_layers, batch, kvh, max_len, hd), dt),
+            v=jnp.zeros((cfg.n_layers, batch, kvh, max_len, hd), dt))
+    if cfg.is_ssm:
+        st = init_ssm_state(cfg, batch, dt)
+        c = dataclasses.replace(
+            c,
+            ssm_h=jnp.zeros((cfg.n_layers,) + st.h.shape, st.h.dtype),
+            ssm_conv=jnp.zeros((cfg.n_layers,) + st.conv.shape, dt))
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        c = dataclasses.replace(
+            c,
+            shared_k=jnp.zeros((n_groups, batch, kvh, max_len, hd), dt),
+            shared_v=jnp.zeros((n_groups, batch, kvh, max_len, hd), dt))
+    return c
+
+
+def _scan_maybe(cfg: ModelConfig, step, carry, xs):
+    """lax.scan, or an unrolled equivalent for the dry-run cost probes."""
+    if cfg.scan_layers:
+        return jax.lax.scan(step, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = step(carry, xi)
+        ys.append(y)
+    ys = jax.tree_util.tree_map(lambda *z: jnp.stack(z), *ys)
+    return carry, ys
+
+
+def decode_step(params: dict, cfg: ModelConfig, dist: Optional[DistContext],
+                token: jax.Array, cache: DecodeCache,
+                enc_out: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, DecodeCache]:
+    """One new token: token [B, 1] -> (logits [B, 1, V], updated cache)."""
+    x = params["embed"][token].astype(_dtype(cfg))
+    bspec = None if dist is None else P(dist.batch_axes, None, None)
+    x = shard(x, dist, bspec)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio", "encdec"):
+
+        def step(carry, xs):
+            h = carry
+            lp, kc, vc = xs
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            att, new_cache = attention_decode(
+                lp["attn"], hn, KVCache(kc, vc, cache.length),
+                cfg.n_heads, cfg.n_kv_heads, rope_theta=cfg.rope_theta,
+                dist=dist, seq_shard=cfg.kv_seq_shard)
+            h = h + att
+            if cfg.family == "encdec" and enc_out is not None:
+                hn = rms_norm(h, lp["ln3"], cfg.norm_eps)
+                h = h + attention(lp["cross"], hn, cfg.n_heads, cfg.n_kv_heads,
+                                  kv_input=enc_out, causal=False)
+            hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                h = h + moe_layer(lp["moe"], hn, cfg, dist)
+            else:
+                h = h + mlp(lp["mlp"], hn, cfg.mlp)
+            return h, (new_cache.k, new_cache.v)
+
+        x, (nk, nv) = _scan_maybe(cfg, step, x,
+                                  (params["layers"], cache.k, cache.v))
+        cache = dataclasses.replace(cache, k=nk, v=nv,
+                                    length=cache.length + 1)
+
+    elif cfg.family == "ssm":
+
+        def step(carry, xs):
+            h = carry
+            lp, sh, sc = xs
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            out, ns = mamba_block_decode(lp["ssm"], hn, SSMState(sh, sc), cfg)
+            return h + out, (ns.h, ns.conv)
+
+        x, (nh, nc) = _scan_maybe(cfg, step, x, (params["layers"], cache.ssm_h,
+                                                 cache.ssm_conv))
+        cache = dataclasses.replace(cache, ssm_h=nh, ssm_conv=nc,
+                                    length=cache.length + 1)
+
+    elif cfg.family == "hybrid":
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // per
+        nh_all, nc_all, sk_all, sv_all = [], [], [], []
+        for g in range(n_groups):
+            grp = jax.tree_util.tree_map(
+                lambda a: a[g * per:(g + 1) * per], params["layers"])
+
+            def step(carry, xs):
+                h = carry
+                lp, sh, sc = xs
+                hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+                out, ns = mamba_block_decode(lp["ssm"], hn, SSMState(sh, sc), cfg)
+                return h + out, (ns.h, ns.conv)
+
+            x, (nh, nc) = _scan_maybe(
+                cfg, step, x, (grp, cache.ssm_h[g * per:(g + 1) * per],
+                               cache.ssm_conv[g * per:(g + 1) * per]))
+            nh_all.append(nh)
+            nc_all.append(nc)
+            sp = params["shared_attn"]
+            hn = rms_norm(x, sp["ln1"], cfg.norm_eps)
+            att, ncache = attention_decode(
+                sp["attn"], hn, KVCache(cache.shared_k[g], cache.shared_v[g],
+                                        cache.length),
+                cfg.n_heads, cfg.n_kv_heads, rope_theta=cfg.rope_theta)
+            x = x + att
+            hn = rms_norm(x, sp["ln2"], cfg.norm_eps)
+            x = x + mlp(sp["mlp"], hn, cfg.mlp)
+            sk_all.append(ncache.k)
+            sv_all.append(ncache.v)
+        cache = dataclasses.replace(
+            cache,
+            ssm_h=jnp.concatenate(nh_all), ssm_conv=jnp.concatenate(nc_all),
+            shared_k=jnp.stack(sk_all), shared_v=jnp.stack(sv_all),
+            length=cache.length + 1)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, cache

@@ -1,0 +1,98 @@
+"""Elastic-scaling controller: topology changes without losing progress.
+
+Policy layer for the 1000+-node posture (DESIGN.md §5). The numeric
+machinery lives in CheckpointManager (unsharded save, reshard-on-restore);
+this controller owns the DECISIONS:
+
+  * given a reported device census, pick the largest valid mesh that the
+    config still shards onto (batch divisibility, expert divisibility);
+  * orchestrate drain → checkpoint → remesh → resume;
+  * replay the data pipeline deterministically (batch content is a pure
+    function of (seed, step, shard), so a resize changes only shard→host
+    assignment, never sample order).
+
+CPU-testable: the census is injected, the remesh math is pure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import List, Optional, Tuple
+
+from ..models.config import ModelConfig
+
+log = logging.getLogger("repro.elastic")
+
+__all__ = ["MeshPlan", "propose_mesh", "ElasticController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    reason: str
+
+    @property
+    def size(self) -> int:
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out
+
+
+def _divisors_desc(n: int) -> List[int]:
+    return [d for d in range(n, 0, -1) if n % d == 0]
+
+
+def propose_mesh(cfg: ModelConfig, n_devices: int, global_batch: int,
+                 prefer_model: int = 16) -> Optional[MeshPlan]:
+    """Largest (data, model) mesh for a device census.
+
+    Constraints: data·model ≤ n_devices; global_batch % data == 0;
+    MoE prefers n_experts % model == 0 (falls back otherwise). Greedy on
+    total size, then on model-axis closeness to ``prefer_model``.
+    """
+    best: Optional[MeshPlan] = None
+    for model in _divisors_desc(prefer_model * 4):
+        if cfg.is_moe and cfg.n_experts % model:
+            continue
+        data = n_devices // model
+        while data > 0 and global_batch % data:
+            data -= 1
+        if data == 0:
+            continue
+        plan = MeshPlan((data, model), ("data", "model"),
+                        f"census={n_devices} batch={global_batch}")
+        if best is None or plan.size > best.size or (
+                plan.size == best.size
+                and abs(model - prefer_model) < abs(best.shape[1] - prefer_model)):
+            best = plan
+    return best
+
+
+class ElasticController:
+    """Drives resize events: drain -> checkpoint -> remesh -> resume."""
+
+    def __init__(self, cfg: ModelConfig, global_batch: int):
+        self.cfg = cfg
+        self.global_batch = global_batch
+        self.current: Optional[MeshPlan] = None
+        self.events: List[dict] = []
+
+    def on_census(self, n_devices: int) -> Tuple[bool, Optional[MeshPlan]]:
+        """Returns (resize_needed, plan). Idempotent for a stable census."""
+        plan = propose_mesh(self.cfg, n_devices, self.global_batch)
+        if plan is None:
+            self.events.append({"census": n_devices, "action": "halt",
+                                "reason": "no valid mesh"})
+            return True, None
+        if self.current is not None and plan.shape == self.current.shape:
+            return False, self.current
+        self.events.append({"census": n_devices, "action": "remesh",
+                            "from": self.current.shape if self.current else None,
+                            "to": plan.shape})
+        log.warning("elastic remesh: %s -> %s (census %d)",
+                    self.current.shape if self.current else None,
+                    plan.shape, n_devices)
+        self.current = plan
+        return True, plan

@@ -1,0 +1,77 @@
+"""train_step / serve_step builders — the units the dry-run lowers.
+
+``make_train_step``: fwd + bwd + AdamW update (optionally with microbatch
+gradient accumulation so collective chains of microbatch i can overlap
+compute of microbatch i+1 under XLA's latency-hiding scheduler).
+
+``make_prefill_step``: forward logits for the ``prefill_*`` shapes.
+``make_decode_step``: one token against a static cache for ``decode_*`` /
+``long_*`` shapes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import DistContext
+from ..models.config import ModelConfig
+from ..models.transformer import decode_step, forward, lm_loss
+from ..optim.adamw import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step"]
+
+
+def make_train_step(cfg: ModelConfig, dist: Optional[DistContext],
+                    opt_cfg: AdamWConfig, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics)."""
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, dist, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def mb_slice(x, i):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0)
+
+            def acc_step(carry, i):
+                loss_acc, grads_acc = carry
+                mb = {k: mb_slice(v, i) for k, v in batch.items()}
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grads_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(a.dtype), grads_acc, grads)
+                return (loss_acc + loss, grads_acc), None
+
+            zero_grads = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros(()), zero_grads),
+                jnp.arange(microbatches))
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+
+        new_params, new_state, metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, dist: Optional[DistContext]):
+    def prefill_step(params, batch):
+        return forward(params, cfg, dist, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, dist: Optional[DistContext]):
+    def serve_step(params, token, cache):
+        return decode_step(params, cfg, dist, token, cache)
+
+    return serve_step

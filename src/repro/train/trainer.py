@@ -1,0 +1,129 @@
+"""Fault-tolerant training loop.
+
+Responsibilities (DESIGN.md §5 — 1000+-node posture, CPU-testable logic):
+  * jit with explicit in/out shardings from the rules in
+    repro.distributed.sharding;
+  * checkpoint/restart: periodic atomic saves, auto-resume from latest,
+    graceful save on SIGTERM/SIGINT (preemption);
+  * straggler watchdog: per-step wall-time EMA; steps slower than
+    ``straggler_factor``×EMA are logged with their step index (on a real
+    cluster this feeds the scheduler's replace-node decision);
+  * elastic restart: restoring onto a different mesh reshards via the
+    checkpoint manager (tested in tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import signal
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..distributed.context import DistContext
+from ..models.config import ModelConfig
+from ..optim.adamw import AdamWConfig, adamw_init
+from .steps import make_train_step
+
+log = logging.getLogger("repro.trainer")
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_retain: int = 3
+    straggler_factor: float = 3.0
+    straggler_warmup: int = 5
+    microbatches: int = 1
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, opt_cfg: AdamWConfig,
+                 tcfg: TrainerConfig, dist: Optional[DistContext] = None):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.dist = dist
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, tcfg.ckpt_retain)
+        self._stop = False
+        self.straggler_events = []
+        self.step_fn = make_train_step(cfg, dist, opt_cfg,
+                                       microbatches=tcfg.microbatches)
+
+    # ------------------------------------------------------------------
+    def _install_signals(self):
+        def handler(signum, frame):
+            log.warning("signal %s: checkpoint-and-exit requested", signum)
+            self._stop = True
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass  # not main thread (tests)
+
+    # ------------------------------------------------------------------
+    def fit(self, params: Any, batches: Iterator[Dict[str, np.ndarray]],
+            resume: bool = True) -> Dict[str, Any]:
+        self._install_signals()
+        opt_state = adamw_init(params)
+        start_step = 0
+        if resume:
+            latest = self.ckpt.latest_step()
+            if latest is not None:
+                state = {"params": params, "opt": opt_state}
+                restored = self.ckpt.restore(latest, state)
+                params, opt_state = restored["params"], restored["opt"]
+                start_step = latest
+                log.info("resumed from step %d", latest)
+
+        step_fn = jax.jit(self.step_fn, donate_argnums=(0, 1))
+        ema = None
+        history = []
+        step = start_step
+        for step in range(start_step, self.tcfg.total_steps):
+            batch = next(batches)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+
+            # straggler watchdog
+            if step - start_step >= self.tcfg.straggler_warmup:
+                if ema is not None and dt > self.tcfg.straggler_factor * ema:
+                    self.straggler_events.append(
+                        {"step": step, "dt": dt, "ema": ema})
+                    log.warning("straggler: step %d took %.3fs (ema %.3fs)",
+                                step, dt, ema)
+                ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+            elif step - start_step == self.tcfg.straggler_warmup - 1:
+                ema = dt
+
+            if step % self.tcfg.log_every == 0:
+                history.append({"step": step,
+                                "loss": float(metrics["loss"]),
+                                "dt": dt})
+                log.info("step %d loss %.4f (%.3fs)", step,
+                         float(metrics["loss"]), dt)
+            if (step + 1) % self.tcfg.ckpt_every == 0 or self._stop:
+                self.ckpt.save(step + 1, {"params": params, "opt": opt_state})
+                if self._stop:
+                    log.warning("preemption save at step %d; exiting", step + 1)
+                    break
+        else:
+            step = self.tcfg.total_steps - 1
+        final = {"params": params, "opt": opt_state}
+        self.ckpt.save(step + 1, final)
+        return {"params": params, "opt_state": opt_state,
+                "history": history,
+                "straggler_events": self.straggler_events,
+                "last_step": step + 1}

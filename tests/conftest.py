@@ -1,0 +1,20 @@
+"""Test harness config.
+
+8 host placeholder devices (NOT the dry-run's 512 — that flag lives only
+in launch/dryrun.py): the distributed SpMM / MoE / sharding tests need a
+small multi-device mesh; everything else is indifferent to it.
+Must run before any jax import, hence conftest.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

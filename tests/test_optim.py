@@ -1,0 +1,84 @@
+"""Optimizer, schedules, clipping, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import (
+    AdamWConfig, adamw_init, adamw_update, clip_by_global_norm,
+    cosine_schedule, global_norm,
+)
+from repro.optim.compression import (
+    ef_compress_pytree, ef_decompress_pytree, init_residual, int8_compress,
+    int8_decompress, topk_compress, topk_decompress,
+)
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=200, schedule="constant")
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["x"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(cfg, params, g, state)
+    assert float(loss(params)) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) == pytest.approx(20.0)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(cosine_schedule(cfg, jnp.asarray(0))) == 0.0
+    assert float(cosine_schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(cosine_schedule(cfg, jnp.asarray(100))) < 1e-6
+
+
+def test_int8_error_feedback_unbiased():
+    """Residual carries quantization error: sum of decompressed updates
+    approaches the true sum (error feedback property)."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(256).astype(np.float32)) * 1e-3
+    res = jnp.zeros(256)
+    acc = jnp.zeros(256)
+    for _ in range(50):
+        c, res = int8_compress(g_true, res)
+        acc = acc + int8_decompress(c, jnp.float32)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(g_true) * 50,
+                               rtol=0.05, atol=1e-4)
+
+
+def test_topk_compression_sparsity():
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((32, 32)).astype(np.float32))
+    res = jnp.zeros((32, 32))
+    c, new_res = topk_compress(g, res, frac=0.05)
+    dec = topk_decompress(c, jnp.float32)
+    nnz = int((np.asarray(dec) != 0).sum())
+    assert nnz <= int(32 * 32 * 0.05) + 1
+    # residual + kept == original
+    np.testing.assert_allclose(np.asarray(dec + new_res), np.asarray(g),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pytree_compression_roundtrip():
+    rng = np.random.default_rng(2)
+    grads = {"w": jnp.asarray(rng.standard_normal((8, 8)).astype(np.float32)),
+             "b": jnp.asarray(rng.standard_normal(8).astype(np.float32))}
+    res = init_residual(grads)
+    comp, new_res = ef_compress_pytree(grads, res, scheme="int8")
+    dec = ef_decompress_pytree(comp, grads, scheme="int8")
+    for a, b, r in zip(jax.tree_util.tree_leaves(dec),
+                       jax.tree_util.tree_leaves(grads),
+                       jax.tree_util.tree_leaves(new_res)):
+        np.testing.assert_allclose(np.asarray(a) + np.asarray(r),
+                                   np.asarray(b), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,99 @@
+"""Planner invariants (paper Eqs. 1-3, 9 and Fig. 5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.planner import build_pair_plan, build_plan
+from repro.core.sparse import (
+    csr_from_dense, hub_sparse, power_law_sparse, random_sparse,
+)
+from repro.core.comm_model import strategy_volumes, balance_stats
+
+
+@pytest.mark.parametrize("gen,seed", [
+    ("uniform", 0), ("uniform", 1), ("powerlaw", 2), ("hub", 3)])
+def test_volume_dominance(gen, seed):
+    """V_joint <= min(V_col, V_row) <= V_block for every matrix."""
+    m = k = 64
+    if gen == "uniform":
+        a = random_sparse(m, k, 0.06, seed)
+    elif gen == "powerlaw":
+        a = power_law_sparse(m, k, 500, 1.3, seed)
+    else:
+        a = hub_sparse(m, k, 3, 3, 0.4, seed)
+    vols = strategy_volumes(a, P=4, n_dense=8)
+    assert vols["joint"] <= min(vols["col"], vols["row"]) <= vols["block"]
+
+
+def test_nonzero_partition_complete():
+    """Every off-diagonal nonzero lands in exactly one of a_col / a_row."""
+    a = power_law_sparse(48, 48, 300, 1.2, 0)
+    plan = build_plan(a, 4, "joint")
+    for (p, q), pp in plan.pair_plans.items():
+        assert pp.a_col.nnz + pp.a_row.nnz == (
+            pp.a_col.nnz + pp.a_row.nnz)  # shapes agree
+        dense = pp.a_col.to_dense() + pp.a_row.to_dense()
+        lo, hi = plan.bounds[p]
+        clo, chi = plan.bounds[q]
+        ref = a.row_block(lo, hi).col_block(clo, chi).to_dense()
+        np.testing.assert_allclose(dense, ref, rtol=1e-6)
+
+
+def test_fig5_patterns():
+    """Paper Fig. 5: reductions 0 / 0 / 0 / 50% vs min(single-strategy)."""
+    pats = {
+        # rows of the 4x4 block (1 = nonzero)
+        "row_skewed": np.array([[1, 1, 1, 1], [1, 1, 1, 1],
+                                [0, 0, 0, 0], [0, 0, 0, 0]]),
+        "col_skewed": np.array([[1, 1, 0, 0], [1, 1, 0, 0],
+                                [1, 1, 0, 0], [1, 1, 0, 0]]),
+        "uniform": np.array([[1, 0, 0, 0], [0, 1, 0, 0],
+                             [0, 0, 1, 0], [0, 0, 0, 1]]),
+        "mixed": np.array([[1, 1, 1, 1], [1, 0, 0, 0],
+                           [1, 0, 0, 0], [1, 0, 0, 0]]),
+    }
+    expect_mu = {"row_skewed": 2, "col_skewed": 2, "uniform": 4, "mixed": 2}
+    expect_red = {"row_skewed": 0.0, "col_skewed": 0.0, "uniform": 0.0,
+                  "mixed": 0.5}
+    for name, mat in pats.items():
+        blk = csr_from_dense(mat.astype(np.float32))
+        pp = build_pair_plan(blk, 0, 1, "joint")
+        assert pp.mu == expect_mu[name], name
+        single = min(pp.n_rows_total, pp.n_cols_total)
+        red = 1 - pp.mu / single
+        assert abs(red - expect_red[name]) < 1e-9, name
+
+
+def test_hub_high_reduction():
+    """mawi-like hub structure: joint eliminates most of the volume."""
+    a = hub_sparse(256, 256, 2, 2, 0.5, 0)
+    vols = strategy_volumes(a, P=8, n_dense=4)
+    red = 1 - vols["joint"] / min(vols["col"], vols["row"])
+    assert red > 0.5  # paper reports up to 96% on mawi
+
+
+def test_block_strategy_full_rows():
+    a = random_sparse(32, 32, 0.1, 0)
+    plan = build_plan(a, 4, "block")
+    for (p, q), pp in plan.pair_plans.items():
+        assert pp.col_ids.size == 8  # full K_q rows (Eq. 1)
+
+
+def test_symmetry_restoration():
+    """Fig. 9: joint plan of a symmetric matrix has symmetric volumes."""
+    a = power_law_sparse(64, 64, 400, 1.3, 1)
+    dense = a.to_dense()
+    sym = csr_from_dense(np.maximum(dense, dense.T))
+    plan_col = build_plan(sym, 4, "col")
+    plan_joint = build_plan(sym, 4, "joint")
+    s_col = balance_stats(plan_col)["symmetry"]
+    s_joint = balance_stats(plan_joint)["symmetry"]
+    assert s_joint >= s_col - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10000))
+def test_joint_never_worse_property(seed):
+    a = power_law_sparse(40, 40, 200, 1.4, seed)
+    vols = strategy_volumes(a, P=4, n_dense=2)
+    assert vols["joint"] <= min(vols["col"], vols["row"])

@@ -1,0 +1,78 @@
+"""Trainer loop (resume, preemption, watchdog plumbing) + data pipeline."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import MemmapTokens, SyntheticLM
+from repro.models.transformer import init_params
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _mk_trainer(tmp_path, steps=8, ckpt_every=4):
+    cfg = get_smoke_config("smollm-135m")
+    opt = AdamWConfig(lr=1e-3, total_steps=steps, warmup_steps=1)
+    tcfg = TrainerConfig(total_steps=steps, ckpt_every=ckpt_every,
+                         ckpt_dir=str(tmp_path), log_every=2,
+                         straggler_warmup=2)
+    return cfg, Trainer(cfg, opt, tcfg)
+
+
+def _batches(cfg, b=2, s=16):
+    data = SyntheticLM(cfg.vocab_size, s, b)
+    step = 0
+    while True:
+        yield data.batch(step)
+        step += 1
+
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    cfg, tr = _mk_trainer(tmp_path)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    out = tr.fit(params, _batches(cfg), resume=False)
+    assert out["last_step"] == 8
+    assert tr.ckpt.latest_step() == 8
+    losses = [h["loss"] for h in out["history"]]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_trainer_resume(tmp_path):
+    cfg, tr = _mk_trainer(tmp_path, steps=4, ckpt_every=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tr.fit(params, _batches(cfg), resume=False)
+    assert tr.ckpt.latest_step() == 4
+    # continue to 8 steps from the checkpoint — no reinit
+    cfg2, tr2 = _mk_trainer(tmp_path, steps=8, ckpt_every=4)
+    out = tr2.fit(init_params(jax.random.PRNGKey(9), cfg2),
+                  _batches(cfg2), resume=True)
+    assert out["last_step"] == 8
+    # opt step counter continued past 4
+    assert int(out["opt_state"]["step"]) >= 8
+
+
+def test_synthetic_determinism():
+    d = SyntheticLM(100, 8, 4, seed=3)
+    a = d.batch(5, shard=1, n_shards=2)
+    b = d.batch(5, shard=1, n_shards=2)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = d.batch(6, shard=1, n_shards=2)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # shards partition the batch deterministically and differ
+    s0 = d.batch(5, shard=0, n_shards=2)
+    assert not np.array_equal(a["tokens"], s0["tokens"])
+    assert a["tokens"].shape == (2, 8)
+
+
+def test_memmap_roundtrip(tmp_path):
+    path = str(tmp_path / "corpus.bin")
+    toks = np.arange(1024, dtype=np.int32)
+    MemmapTokens.write_corpus(path, toks)
+    d = MemmapTokens(path, vocab_size=2048, seq_len=16, global_batch=4)
+    b = d.batch(0)
+    assert b["tokens"].shape == (4, 16)
+    assert b["tokens"].max() < 2048
+    b2 = d.batch(0)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])
