@@ -16,8 +16,15 @@ from .mwvc import (
     hopcroft_karp, min_vertex_cover_unweighted, min_vertex_cover_weighted,
     cover_is_valid,
 )
-from .planner import Strategy, PairPlan, SpmmPlan, build_pair_plan, build_plan
-from .hierarchy import HierPlan, build_hier_plan
+from .planner import (
+    Strategy, PairPlan, SpmmPlan, build_pair_plan, build_plan,
+    local_piece_csrs,
+)
+from .hierarchy import HierPlan, build_hier_plan, hier_piece_csrs
+from .local_backend import (
+    LocalSpmmBackend, CooBackend, BsrBackend,
+    get_backend, register_backend, available_backends,
+)
 from .comm_model import (
     NetworkSpec, TSUBAME_LIKE, TPU_POD, AURORA_LIKE,
     strategy_volumes, modeled_time, modeled_time_hier, balance_stats,
@@ -34,7 +41,10 @@ __all__ = [
     "hopcroft_karp", "min_vertex_cover_unweighted", "min_vertex_cover_weighted",
     "cover_is_valid",
     "Strategy", "PairPlan", "SpmmPlan", "build_pair_plan", "build_plan",
-    "HierPlan", "build_hier_plan",
+    "local_piece_csrs",
+    "HierPlan", "build_hier_plan", "hier_piece_csrs",
+    "LocalSpmmBackend", "CooBackend", "BsrBackend",
+    "get_backend", "register_backend", "available_backends",
     "NetworkSpec", "TSUBAME_LIKE", "TPU_POD", "AURORA_LIKE",
     "strategy_volumes", "modeled_time", "modeled_time_hier", "balance_stats",
     "FlatExecPlan", "HierExecPlan", "flat_exec_arrays", "hier_exec_arrays",

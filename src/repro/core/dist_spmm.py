@@ -14,25 +14,28 @@ All buffer shapes are static (padded by the offline planner), so both
 executors jit/lower cleanly — the same property the multi-pod dry-run
 relies on.
 
-Device-side sparse pieces are padded COO; the compute itself is a
-gather + segment-scatter (`.at[].add`) which XLA fuses well on CPU/TPU;
-the Pallas BSR kernel (kernels/bsr_spmm.py) is the high-performance
-substitute for the diagonal/local block on real TPUs.
+Local compute is pluggable (core.local_backend): each exec plan carries
+the planner's sparse pieces prepared in one or more backend layouts
+(padded COO scatter-add, Pallas ELL/BSR blocks, ...), and the executors
+take ``backend="coo"|"bsr"`` per call. The communication schedule is
+backend-invariant — the collectives in the lowered HLO are identical
+whichever backend computes the local pieces.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import List, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .hierarchy import HierPlan
-from .planner import SpmmPlan
-from .sparse import CSRMatrix
+from ..compat import all_to_all, psum_scatter, shard_map
+from .hierarchy import HierPlan, hier_piece_csrs
+from .local_backend import (
+    LocalSpmmBackend, coo_spmm_local, get_backend,
+)
+from .planner import SpmmPlan, local_piece_csrs
 
 __all__ = [
     "FlatExecPlan",
@@ -44,29 +47,68 @@ __all__ = [
     "coo_spmm_local",
 ]
 
+BackendSpec = Union[str, LocalSpmmBackend]
 
-# ---------------------------------------------------------------------------
-# pytrees
-# ---------------------------------------------------------------------------
+# piece name -> backend-native arrays, all with leading [P, ...] (flat) or
+# [G, L, ...] (hier) axes so they shard over the mesh like any other leaf
+Pieces = Dict[str, Dict[str, jax.Array]]
+
+
+def _prepare_pieces(
+    piece_csrs: Dict[str, list],
+    backends: Sequence[BackendSpec],
+) -> Tuple[Dict[str, Pieces], Dict[str, LocalSpmmBackend]]:
+    """Run every requested backend's host-side prepare over the pieces."""
+    prepared: Dict[str, Pieces] = {}
+    resolved: Dict[str, LocalSpmmBackend] = {}
+    for spec in backends:
+        be = get_backend(spec)
+        if be.name in resolved:
+            raise ValueError(f"duplicate backend {be.name!r}")
+        resolved[be.name] = be
+        prepared[be.name] = {k: be.prepare(v) for k, v in piece_csrs.items()}
+    if not resolved:
+        raise ValueError("at least one backend is required")
+    return prepared, resolved
+
+
+class _ExecPlanBase:
+    """Shared backend-resolution logic for the two exec-plan pytrees."""
+
+    def resolve_backend(self, backend: Optional[BackendSpec]
+                        ) -> Tuple[LocalSpmmBackend, Dict[str, jax.Array]]:
+        if backend is None:
+            be = self.meta["backends"][self.meta["default_backend"]]
+        elif isinstance(backend, str):
+            # the plan's own instances win over the global registry, so a
+            # custom backend passed to *_exec_arrays stays addressable by
+            # its name even when it was never register_backend()-ed
+            be = self.meta["backends"].get(backend) or get_backend(backend)
+        else:
+            be = backend
+        # the selected backend must match a prepared layout
+        if be.name not in self.pieces:
+            raise ValueError(
+                f"backend {be.name!r} has no prepared pieces in this plan; "
+                f"rebuild with *_exec_arrays(plan, backends=(..., {be.name!r}))"
+            )
+        return be, self.pieces[be.name]
+
+    @property
+    def backends(self) -> Tuple[str, ...]:
+        return tuple(self.pieces)
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class FlatExecPlan:
-    """Stacked per-process device arrays for the flat executor."""
+class FlatExecPlan(_ExecPlanBase):
+    """Stacked per-process device arrays for the flat executor.
 
-    # diagonal block COO (local rows x local cols)
-    diag_row: jax.Array  # [P, nnzd] int32
-    diag_col: jax.Array
-    diag_val: jax.Array
-    # column-covered off-diag COO; cols index flat recv space P*max_b
-    colp_row: jax.Array  # [P, nnzc]
-    colp_col: jax.Array
-    colp_val: jax.Array
-    # row-covered off-diag COO; rows index flat send space P*max_c
-    rowp_row: jax.Array  # [P, nnzr]
-    rowp_col: jax.Array
-    rowp_val: jax.Array
+    ``pieces[backend][piece]`` holds the backend-native arrays for the
+    three local-compute pieces ('diag', 'colp', 'rowp'), leading axis P.
+    """
+
+    pieces: Dict[str, Pieces]
     b_send_idx: jax.Array  # [P(src), P(dst), max_b] int32, -1 pad
     c_recv_rows: jax.Array  # [P(dst), P(src), max_c] int32, -1 pad
     meta: dict = dataclasses.field(metadata=dict(static=True), default_factory=dict)
@@ -86,22 +128,14 @@ class FlatExecPlan:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class HierExecPlan:
+class HierExecPlan(_ExecPlanBase):
     """Stacked per-process device arrays for the hierarchical executor.
 
     All leading [P, ...] arrays are reshaped to [G, L, ...] so they shard
     over the ('g', 'l') mesh axes.
     """
 
-    diag_row: jax.Array  # [G, L, nnzd]
-    diag_col: jax.Array
-    diag_val: jax.Array
-    colp_row: jax.Array  # [G, L, nnzc]; cols index [L*G*max_bg] gathered space
-    colp_col: jax.Array
-    colp_val: jax.Array
-    rowp_row: jax.Array  # [G, L, nnzr]; rows index [P*max_cg] group space
-    rowp_col: jax.Array
-    rowp_val: jax.Array
+    pieces: Dict[str, Pieces]
     b_group_send_idx: jax.Array  # [G, L, G(dst), max_bg]
     c_recv_rows: jax.Array  # [G(dst), L(dst), G(src), max_cg]
     meta: dict = dataclasses.field(metadata=dict(static=True), default_factory=dict)
@@ -128,106 +162,55 @@ class HierExecPlan:
 # ---------------------------------------------------------------------------
 
 
-def _stack_coo(csrs: List[CSRMatrix]) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Stack per-process CSR pieces into padded COO [P, nnz_max] arrays."""
-    coos = [c.to_coo() for c in csrs]
-    nnz = max((c.nnz for c in coos), default=0)
-    nnz = max(nnz, 1)
-    P_ = len(csrs)
-    row = np.zeros((P_, nnz), np.int32)
-    col = np.zeros((P_, nnz), np.int32)
-    val = np.zeros((P_, nnz), np.float32)
-    for i, c in enumerate(coos):
-        row[i, : c.nnz] = c.row
-        col[i, : c.nnz] = c.col
-        val[i, : c.nnz] = c.val
-    return row, col, val
-
-
-def flat_exec_arrays(plan: SpmmPlan) -> FlatExecPlan:
-    """Convert an offline SpmmPlan into stacked device arrays."""
-    m_locals = {b[1] - b[0] for b in plan.bounds}
+def _uniform_m_local(bounds) -> int:
+    m_locals = {b[1] - b[0] for b in bounds}
     if len(m_locals) != 1:
         raise ValueError("row blocks must be equal-sized; pad M to P|M first")
-    dr, dc, dv = _stack_coo(plan.a_diag)
-    cr, cc, cv = _stack_coo(plan.a_colpart)
-    rr, rc, rv = _stack_coo(plan.a_rowpart)
+    return int(next(iter(m_locals)))
+
+
+def flat_exec_arrays(plan: SpmmPlan,
+                     backends: Sequence[BackendSpec] = ("coo",)
+                     ) -> FlatExecPlan:
+    """Convert an offline SpmmPlan into stacked device arrays.
+
+    ``backends`` selects which local-compute layouts to prepare; the
+    executor picks among them per call (``flat_spmm(..., backend=...)``).
+    """
+    m_local = _uniform_m_local(plan.bounds)
+    pieces, resolved = _prepare_pieces(local_piece_csrs(plan), backends)
     return FlatExecPlan(
-        diag_row=jnp.asarray(dr), diag_col=jnp.asarray(dc), diag_val=jnp.asarray(dv),
-        colp_row=jnp.asarray(cr), colp_col=jnp.asarray(cc), colp_val=jnp.asarray(cv),
-        rowp_row=jnp.asarray(rr), rowp_col=jnp.asarray(rc), rowp_val=jnp.asarray(rv),
+        pieces=pieces,
         b_send_idx=jnp.asarray(plan.b_send_idx),
         c_recv_rows=jnp.asarray(plan.c_send_rows.transpose(1, 0, 2)),
         meta=dict(P=plan.P, max_b=plan.max_b, max_c=plan.max_c,
-                  m_local=int(next(iter(m_locals)))),
+                  m_local=m_local, backends=resolved,
+                  default_backend=next(iter(resolved))),
     )
 
 
-def hier_exec_arrays(hier: HierPlan) -> HierExecPlan:
+def hier_exec_arrays(hier: HierPlan,
+                     backends: Sequence[BackendSpec] = ("coo",)
+                     ) -> HierExecPlan:
     """Convert a HierPlan into stacked device arrays for the (g,l) mesh."""
     base = hier.base
-    P_, G, L = base.P, hier.G, hier.L
-    m_locals = {b[1] - b[0] for b in base.bounds}
-    if len(m_locals) != 1:
-        raise ValueError("row blocks must be equal-sized; pad M to P|M first")
-    dr, dc, dv = _stack_coo(base.a_diag)
-
-    # column part: remap flat cols to the hierarchical gathered space
-    colp_csrs = base.a_colpart
-    nnzc = max(max((c.nnz for c in colp_csrs), default=0), 1)
-    cr = np.zeros((P_, nnzc), np.int32)
-    cc = np.zeros((P_, nnzc), np.int32)
-    cv = np.zeros((P_, nnzc), np.float32)
-    for p in range(P_):
-        coo = colp_csrs[p].to_coo()
-        cr[p, : coo.nnz] = coo.row
-        cc[p, : coo.nnz] = hier.colpart_flat_cols[p]
-        cv[p, : coo.nnz] = coo.val
-
-    # row part: remap flat rows (p*max_c + s) -> (p*max_cg + group_slot)
-    rowp_csrs = base.a_rowpart
-    nnzr = max(max((c.nnz for c in rowp_csrs), default=0), 1)
-    rr = np.zeros((P_, nnzr), np.int32)
-    rc = np.zeros((P_, nnzr), np.int32)
-    rv = np.zeros((P_, nnzr), np.float32)
-    for q in range(P_):
-        coo = rowp_csrs[q].to_coo()
-        flat = coo.row.astype(np.int64)
-        ps, slots = flat // base.max_c, flat % base.max_c
-        gslot = hier.c_slot_of_pair[q, ps, slots]
-        assert np.all(gslot >= 0)
-        rr[q, : coo.nnz] = (ps * hier.max_cg + gslot).astype(np.int32)
-        rc[q, : coo.nnz] = coo.col
-        rv[q, : coo.nnz] = coo.val
-
-    def _r(x, extra=()):  # [P, ...] -> [G, L, ...]
-        return jnp.asarray(x.reshape((G, L) + x.shape[1:]))
-
-    c_recv = hier.c_group_rows.transpose(1, 0, 2).reshape(G, L, hier.G, hier.max_cg)
+    G, L = hier.G, hier.L
+    m_local = _uniform_m_local(base.bounds)
+    pieces, resolved = _prepare_pieces(hier_piece_csrs(hier), backends)
+    # reshape every piece leaf [P, ...] -> [G, L, ...] for the (g,l) mesh
+    pieces = jax.tree_util.tree_map(
+        lambda x: x.reshape((G, L) + x.shape[1:]), pieces)
+    c_recv = hier.c_group_rows.transpose(1, 0, 2).reshape(
+        G, L, hier.G, hier.max_cg)
     return HierExecPlan(
-        diag_row=_r(dr), diag_col=_r(dc), diag_val=_r(dv),
-        colp_row=_r(cr), colp_col=_r(cc), colp_val=_r(cv),
-        rowp_row=_r(rr), rowp_col=_r(rc), rowp_val=_r(rv),
-        b_group_send_idx=_r(hier.b_group_send_idx),
+        pieces=pieces,
+        b_group_send_idx=jnp.asarray(
+            hier.b_group_send_idx.reshape(G, L, hier.G, hier.max_bg)),
         c_recv_rows=jnp.asarray(c_recv),
         meta=dict(G=G, L=L, max_bg=hier.max_bg, max_cg=hier.max_cg,
-                  m_local=int(next(iter(m_locals)))),
+                  m_local=m_local, backends=resolved,
+                  default_backend=next(iter(resolved))),
     )
-
-
-# ---------------------------------------------------------------------------
-# compute primitives
-# ---------------------------------------------------------------------------
-
-
-def coo_spmm_local(row: jax.Array, col: jax.Array, val: jax.Array,
-                   b: jax.Array, m_out: int) -> jax.Array:
-    """C[m_out, N] = scatter-add_{e} val[e] * b[col[e]] into row[e].
-
-    Padded entries carry val == 0 so they contribute nothing.
-    """
-    gathered = b[col] * val[:, None]
-    return jnp.zeros((m_out, b.shape[1]), b.dtype).at[row].add(gathered)
 
 
 def _gather_send_rows(b_local: jax.Array, idx: jax.Array) -> jax.Array:
@@ -243,39 +226,40 @@ def _gather_send_rows(b_local: jax.Array, idx: jax.Array) -> jax.Array:
 
 
 def flat_spmm(plan: FlatExecPlan, b_global: jax.Array, mesh: Mesh,
-              axis: str = "x") -> jax.Array:
+              axis: str = "x",
+              backend: Optional[BackendSpec] = None) -> jax.Array:
     """Execute ``C = A @ B`` with the flat SHIRO schedule on ``mesh[axis]``.
 
     ``b_global``: [K, N] dense matrix, row-sharded over ``axis``.
-    Returns C [M, N] row-sharded the same way.
+    ``backend`` selects the local-compute substrate among the layouts the
+    plan was built with (default: the plan's first backend). Returns C
+    [M, N] row-sharded the same way.
     """
     m_local = plan.meta["m_local"]
     P_ = plan.P
+    be, pieces = plan.resolve_backend(backend)
 
-    def body(diag_row, diag_col, diag_val, colp_row, colp_col, colp_val,
-             rowp_row, rowp_col, rowp_val, b_send_idx, c_recv_rows, b_loc):
-        (diag_row, diag_col, diag_val, colp_row, colp_col, colp_val,
-         rowp_row, rowp_col, rowp_val, b_send_idx, c_recv_rows) = (
-            x[0] for x in (diag_row, diag_col, diag_val, colp_row, colp_col,
-                           colp_val, rowp_row, rowp_col, rowp_val,
-                           b_send_idx, c_recv_rows))
+    def body(pieces, b_send_idx, c_recv_rows, b_loc):
+        pieces = jax.tree_util.tree_map(lambda x: x[0], pieces)
+        b_send_idx = b_send_idx[0]
+        c_recv_rows = c_recv_rows[0]
         n = b_loc.shape[1]
 
         # ① pack + exchange B rows (column-based communication, Fig. 1(b))
         send_b = _gather_send_rows(b_loc, b_send_idx)  # [P, max_b, N]
-        recv_b = jax.lax.all_to_all(send_b, axis, 0, 0, tiled=False)
+        recv_b = all_to_all(send_b, axis, 0, 0, tiled=False)
 
         # ② remote computation (row-based, Fig. 1(c)): partial C rows for
         #    every other process, computed against the LOCAL B block.
-        partials = coo_spmm_local(rowp_row, rowp_col, rowp_val, b_loc,
-                                  P_ * plan.max_c)  # [P*max_c, N]
+        partials = be.compute(pieces["rowp"], b_loc,
+                              P_ * plan.max_c)  # [P*max_c, N]
         send_c = partials.reshape(P_, plan.max_c, n)
-        recv_c = jax.lax.all_to_all(send_c, axis, 0, 0, tiled=False)
+        recv_c = all_to_all(send_c, axis, 0, 0, tiled=False)
 
         # ③ local compute: diagonal block + column-covered remote nonzeros
-        c = coo_spmm_local(diag_row, diag_col, diag_val, b_loc, m_local)
+        c = be.compute(pieces["diag"], b_loc, m_local)
         recv_b_flat = recv_b.reshape(P_ * plan.max_b, n)
-        c = c + coo_spmm_local(colp_row, colp_col, colp_val, recv_b_flat, m_local)
+        c = c + be.compute(pieces["colp"], recv_b_flat, m_local)
 
         # ④ result aggregation: scatter received partial C rows
         tgt = c_recv_rows.reshape(-1)  # [P*max_c]
@@ -284,18 +268,10 @@ def flat_spmm(plan: FlatExecPlan, b_global: jax.Array, mesh: Mesh,
         c = c.at[jnp.maximum(tgt, 0)].add(vals)
         return c
 
-    from jax import shard_map
-
-    specs_in = (
-        [P(axis)] * 9 + [P(axis), P(axis)] + [P(axis)]
-    )
     fn = shard_map(body, mesh=mesh,
-                   in_specs=tuple(specs_in), out_specs=P(axis),
-                   check_vma=False)
-    return fn(plan.diag_row, plan.diag_col, plan.diag_val,
-              plan.colp_row, plan.colp_col, plan.colp_val,
-              plan.rowp_row, plan.rowp_col, plan.rowp_val,
-              plan.b_send_idx, plan.c_recv_rows, b_global)
+                   in_specs=(P(axis), P(axis), P(axis), P(axis)),
+                   out_specs=P(axis))
+    return fn(pieces, plan.b_send_idx, plan.c_recv_rows, b_global)
 
 
 # ---------------------------------------------------------------------------
@@ -304,46 +280,45 @@ def flat_spmm(plan: FlatExecPlan, b_global: jax.Array, mesh: Mesh,
 
 
 def hier_spmm(plan: HierExecPlan, b_global: jax.Array, mesh: Mesh,
-              group_axis: str = "g", local_axis: str = "l") -> jax.Array:
+              group_axis: str = "g", local_axis: str = "l",
+              backend: Optional[BackendSpec] = None) -> jax.Array:
     """Two-tier SHIRO schedule on a (group, local) mesh.
 
     Program order follows paper Alg. 1; the two stages use disjoint axes
     (inter ↔ ``group_axis``, intra ↔ ``local_axis``) so the compiler can
-    overlap them (Fig. 6(f)).
+    overlap them (Fig. 6(f)). ``backend`` selects the local-compute
+    substrate exactly as in ``flat_spmm``.
     """
     m_local = plan.meta["m_local"]
     G, L = plan.G, plan.L
     max_bg, max_cg = plan.max_bg, plan.max_cg
+    be, pieces = plan.resolve_backend(backend)
 
-    def body(diag_row, diag_col, diag_val, colp_row, colp_col, colp_val,
-             rowp_row, rowp_col, rowp_val, b_group_send_idx, c_recv_rows,
-             b_loc):
-        (diag_row, diag_col, diag_val, colp_row, colp_col, colp_val,
-         rowp_row, rowp_col, rowp_val, b_group_send_idx, c_recv_rows) = (
-            x[0, 0] for x in (diag_row, diag_col, diag_val, colp_row,
-                              colp_col, colp_val, rowp_row, rowp_col,
-                              rowp_val, b_group_send_idx, c_recv_rows))
+    def body(pieces, b_group_send_idx, c_recv_rows, b_loc):
+        pieces = jax.tree_util.tree_map(lambda x: x[0, 0], pieces)
+        b_group_send_idx = b_group_send_idx[0, 0]
+        c_recv_rows = c_recv_rows[0, 0]
         n = b_loc.shape[1]
 
         # Stage I.① (inter-group, column-based): ship de-duplicated B rows
         # once per destination group. Pairs (g, l) <-> (g', l).
         send_bg = _gather_send_rows(b_loc, b_group_send_idx)  # [G, max_bg, N]
-        recv_bg = jax.lax.all_to_all(send_bg, group_axis, 0, 0, tiled=False)
+        recv_bg = all_to_all(send_bg, group_axis, 0, 0, tiled=False)
 
         # Stage I.① (intra-group, row-based): compute partials and
         # pre-aggregate within the source group via reduce-scatter; each
         # member ends up owning the aggregates for destinations that share
         # its local rank (the "representative" of paper Fig. 6(e)).
-        partials = coo_spmm_local(rowp_row, rowp_col, rowp_val, b_loc,
-                                  G * L * max_cg)  # [(gd,ld,slot), N]
+        partials = be.compute(pieces["rowp"], b_loc,
+                              G * L * max_cg)  # [(gd,ld,slot), N]
         partials = partials.reshape(G, L * max_cg, n)
-        agg = jax.lax.psum_scatter(partials, local_axis,
-                                   scatter_dimension=1, tiled=True)
+        agg = psum_scatter(partials, local_axis,
+                           scatter_dimension=1, tiled=True)
         # agg: [G(dst), max_cg, N] — aggregated partials for dests with my l.
 
         # Stage II.② (inter-group, row-based): aggregated C rows cross the
         # slow tier once per source group.
-        recv_cg = jax.lax.all_to_all(agg, group_axis, 0, 0, tiled=False)
+        recv_cg = all_to_all(agg, group_axis, 0, 0, tiled=False)
         # recv_cg: [G(src), max_cg, N] for THIS process as destination.
 
         # Stage II.② (intra-group, column-based): distribute fetched B rows
@@ -352,9 +327,9 @@ def hier_spmm(plan: HierExecPlan, b_global: jax.Array, mesh: Mesh,
         # all_bg: [L(src), G(src), max_bg, N] — the group's fetched rows.
 
         # local compute
-        c = coo_spmm_local(diag_row, diag_col, diag_val, b_loc, m_local)
+        c = be.compute(pieces["diag"], b_loc, m_local)
         bg_flat = all_bg.reshape(L * G * max_bg, n)
-        c = c + coo_spmm_local(colp_row, colp_col, colp_val, bg_flat, m_local)
+        c = c + be.compute(pieces["colp"], bg_flat, m_local)
 
         # result aggregation of row-based partials
         tgt = c_recv_rows.reshape(-1)  # [G*max_cg]
@@ -363,14 +338,9 @@ def hier_spmm(plan: HierExecPlan, b_global: jax.Array, mesh: Mesh,
         c = c.at[jnp.maximum(tgt, 0)].add(vals)
         return c[None]
 
-    from jax import shard_map
-
     gl = P(group_axis, local_axis)
-    specs_in = [gl] * 11 + [P((group_axis, local_axis))]
-    fn = shard_map(body, mesh=mesh, in_specs=tuple(specs_in),
-                   out_specs=gl, check_vma=False)
-    out = fn(plan.diag_row, plan.diag_col, plan.diag_val,
-             plan.colp_row, plan.colp_col, plan.colp_val,
-             plan.rowp_row, plan.rowp_col, plan.rowp_val,
-             plan.b_group_send_idx, plan.c_recv_rows, b_global)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(gl, gl, gl, P((group_axis, local_axis))),
+                   out_specs=gl)
+    out = fn(pieces, plan.b_group_send_idx, plan.c_recv_rows, b_global)
     return out.reshape(-1, b_global.shape[1])

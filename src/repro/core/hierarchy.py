@@ -38,8 +38,10 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from .planner import SpmmPlan
+from .sparse import COOMatrix, CSRMatrix, csr_from_coo
 
-__all__ = ["HierPlan", "build_hier_plan", "build_group_aware_plan"]
+__all__ = ["HierPlan", "build_hier_plan", "build_group_aware_plan",
+           "hier_piece_csrs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +175,42 @@ def build_hier_plan(base: SpmmPlan, G: int, L: int, pad_to: int = 1) -> HierPlan
         c_group_rows=c_group_rows,
         c_slot_of_pair=c_slot_of_pair,
     )
+
+
+def hier_piece_csrs(hier: HierPlan) -> dict:
+    """Per-piece local layouts for the hierarchical executor's backends.
+
+    Same three pieces as ``planner.local_piece_csrs`` but with the flat
+    off-diagonal index spaces remapped onto the two-tier buffers:
+
+      colp — columns move from the flat receive space (q·max_b + slot) to
+             the gathered group space ((l_src·G + g_src)·max_bg + slot);
+      rowp — rows move from (dest·max_c + slot) to the pre-aggregation
+             layout (dest·max_cg + group_slot) fed to psum_scatter.
+    """
+    base = hier.base
+    P = base.P
+    gathered_cols = hier.L * hier.G * hier.max_bg
+    colp: List[CSRMatrix] = []
+    for p in range(P):
+        coo = base.a_colpart[p].to_coo()
+        colp.append(csr_from_coo(COOMatrix(
+            (base.a_colpart[p].shape[0], gathered_cols),
+            coo.row, hier.colpart_flat_cols[p].astype(np.int32), coo.val)))
+
+    group_rows = P * hier.max_cg
+    rowp: List[CSRMatrix] = []
+    for q in range(P):
+        coo = base.a_rowpart[q].to_coo()
+        flat = coo.row.astype(np.int64)
+        ps, slots = flat // base.max_c, flat % base.max_c
+        gslot = hier.c_slot_of_pair[q, ps, slots]
+        assert np.all(gslot >= 0)
+        rowp.append(csr_from_coo(COOMatrix(
+            (group_rows, base.a_rowpart[q].shape[1]),
+            (ps * hier.max_cg + gslot).astype(np.int32), coo.col, coo.val)))
+
+    return {"diag": list(base.a_diag), "colp": colp, "rowp": rowp}
 
 
 def build_group_aware_plan(a, P: int, G: int, L: int, pad_to: int = 1):

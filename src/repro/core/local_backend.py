@@ -1,0 +1,210 @@
+"""Pluggable local-compute backends for the distributed SpMM executors.
+
+SHIRO's speedups come from pairing a sparsity-aware communication schedule
+with the fastest available *local* SpMM. This module is the seam between
+the two: the executors (core.dist_spmm) fix the collectives, and a
+``LocalSpmmBackend`` fixes how each padded sparse piece (diagonal block,
+column-covered part, row-covered part) is multiplied against its dense
+operand on-device.
+
+A backend owns both sides of the seam:
+
+* ``prepare(csrs)`` — host side, once per plan: convert the planner's
+  per-process CSR pieces into stacked device arrays in the backend's
+  native layout (leading axis = process).
+* ``compute(piece, b, m_out)`` — device side, called INSIDE the shard_map
+  body on a single process's piece (leading axis already stripped).
+
+Swapping backends changes local FLOPs only — the communication schedule
+(all_to_all / psum_scatter buffers) never sees the piece layout, so the
+lowered collectives are bit-identical across backends.
+
+Built-ins:
+
+* ``CooBackend`` — padded COO gather + segment scatter-add. XLA fuses it
+  well on CPU and it tolerates arbitrary shapes; the portable default.
+* ``BsrBackend`` — ELL block layout feeding the Pallas MXU kernel
+  (kernels.bsr_spmm). ``interpret=None`` auto-selects interpret mode off
+  TPU; ``impl="ref"`` forces the pure-jnp oracle (kernels.ref).
+
+Third backends register via ``register_backend`` (see ROADMAP.md
+"Backends & JAX compatibility").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, List, Protocol, Tuple, Union, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sparse import CSRMatrix, ell_from_csr
+
+__all__ = [
+    "LocalSpmmBackend",
+    "CooBackend",
+    "BsrBackend",
+    "coo_spmm_local",
+    "get_backend",
+    "register_backend",
+    "available_backends",
+]
+
+Piece = Dict[str, jax.Array]
+
+
+@runtime_checkable
+class LocalSpmmBackend(Protocol):
+    """Local sparse-times-dense substrate used inside the executors."""
+
+    name: str
+
+    def prepare(self, csrs: List[CSRMatrix]) -> Piece:
+        """Stack per-process CSR pieces into device arrays [P, ...]."""
+
+    def compute(self, piece: Piece, b: jax.Array, m_out: int) -> jax.Array:
+        """C[m_out, N] = piece @ b for one process's (stripped) piece."""
+
+
+# ---------------------------------------------------------------------------
+# COO backend (portable default)
+# ---------------------------------------------------------------------------
+
+
+def coo_spmm_local(row: jax.Array, col: jax.Array, val: jax.Array,
+                   b: jax.Array, m_out: int) -> jax.Array:
+    """C[m_out, N] = scatter-add_{e} val[e] * b[col[e]] into row[e].
+
+    Padded entries carry val == 0 so they contribute nothing.
+    """
+    gathered = b[col] * val[:, None]
+    return jnp.zeros((m_out, b.shape[1]), b.dtype).at[row].add(gathered)
+
+
+def _stack_coo(csrs: List[CSRMatrix]) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-process CSR pieces into padded COO [P, nnz_max] arrays."""
+    coos = [c.to_coo() for c in csrs]
+    nnz = max((c.nnz for c in coos), default=0)
+    nnz = max(nnz, 1)
+    P_ = len(csrs)
+    row = np.zeros((P_, nnz), np.int32)
+    col = np.zeros((P_, nnz), np.int32)
+    val = np.zeros((P_, nnz), np.float32)
+    for i, c in enumerate(coos):
+        row[i, : c.nnz] = c.row
+        col[i, : c.nnz] = c.col
+        val[i, : c.nnz] = c.val
+    return row, col, val
+
+
+@dataclasses.dataclass(frozen=True)
+class CooBackend:
+    """Padded-COO gather + segment scatter-add (today's executor compute)."""
+
+    name: ClassVar[str] = "coo"
+
+    def prepare(self, csrs: List[CSRMatrix]) -> Piece:
+        row, col, val = _stack_coo(csrs)
+        return {"row": jnp.asarray(row), "col": jnp.asarray(col),
+                "val": jnp.asarray(val)}
+
+    def compute(self, piece: Piece, b: jax.Array, m_out: int) -> jax.Array:
+        return coo_spmm_local(piece["row"], piece["col"], piece["val"],
+                              b, m_out)
+
+
+# ---------------------------------------------------------------------------
+# BSR/ELL backend (MXU-ready Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class BsrBackend:
+    """ELL block layout feeding the Pallas BSR kernel.
+
+    ``block``: (bm, bk) dense-block shape emitted by the planner layer —
+    128×128 saturates the MXU on real TPUs; small tests shrink it.
+    ``bn``: kernel output tile width; N is zero-padded up to a multiple.
+    ``interpret``: None → auto (Pallas interpret mode everywhere but TPU).
+    ``impl``: "pallas" | "ref" — "ref" routes through the pure-jnp oracle
+    (kernels.ref.bsr_spmm_ref) instead of pallas_call entirely.
+    """
+
+    name: ClassVar[str] = "bsr"
+
+    block: Tuple[int, int] = (8, 8)
+    bn: int = 128
+    interpret: Union[bool, None] = None
+    impl: str = "pallas"
+
+    def prepare(self, csrs: List[CSRMatrix]) -> Piece:
+        per = [ell_from_csr(c, self.block) for c in csrs]
+        t = max(bc.shape[1] for bc, _ in per)
+        bm, bk = self.block
+        P_ = len(per)
+        mb = per[0][0].shape[0]
+        cols = np.full((P_, mb, t), -1, np.int32)
+        blocks = np.zeros((P_, mb, t, bm, bk), np.float32)
+        for i, (bc, blk) in enumerate(per):
+            cols[i, :, : bc.shape[1]] = bc
+            blocks[i, :, : bc.shape[1]] = blk
+        return {"block_cols": jnp.asarray(cols), "blocks": jnp.asarray(blocks)}
+
+    def compute(self, piece: Piece, b: jax.Array, m_out: int) -> jax.Array:
+        cols, blocks = piece["block_cols"], piece["blocks"]
+        _, _, bm, bk = blocks.shape
+        k, n = b.shape
+        kb = _round_up(k, bk) // bk
+        if self.impl == "ref":
+            from ..kernels.ref import bsr_spmm_ref
+
+            # the oracle has no tile-width requirement: pad K only
+            out = bsr_spmm_ref(cols, blocks,
+                               jnp.pad(b, ((0, kb * bk - k), (0, 0))))
+        else:
+            from ..kernels.bsr_spmm import bsr_spmm_pallas
+
+            n_pad = _round_up(n, self.bn)
+            b_p = jnp.pad(b, ((0, kb * bk - k), (0, n_pad - n)))
+            interpret = self.interpret
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
+            out = bsr_spmm_pallas(cols, blocks, b_p, bn=self.bn,
+                                  interpret=bool(interpret))
+        return out[:m_out, :n].astype(b.dtype)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_BACKENDS: Dict[str, LocalSpmmBackend] = {
+    CooBackend.name: CooBackend(),
+    BsrBackend.name: BsrBackend(),
+}
+
+
+def register_backend(backend: LocalSpmmBackend) -> None:
+    """Install (or override) the default instance used for ``backend.name``."""
+    _BACKENDS[backend.name] = backend
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(_BACKENDS)
+
+
+def get_backend(spec: Union[str, LocalSpmmBackend]) -> LocalSpmmBackend:
+    """Resolve a backend name or pass an instance through."""
+    if isinstance(spec, str):
+        try:
+            return _BACKENDS[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {spec!r}; available: {available_backends()}"
+            ) from None
+    return spec

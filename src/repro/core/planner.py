@@ -33,6 +33,7 @@ __all__ = [
     "build_pair_plan",
     "build_plan",
     "pair_volume_rows",
+    "local_piece_csrs",
 ]
 
 Strategy = str  # 'block' | 'col' | 'row' | 'joint'
@@ -193,6 +194,28 @@ class SpmmPlan:
         for (p, q), pp in self.pair_plans.items():
             m[q, p] = pp.mu
         return m
+
+
+def local_piece_csrs(plan: SpmmPlan) -> Dict[str, List[CSRMatrix]]:
+    """Per-piece local layouts consumed by ``LocalSpmmBackend.prepare``.
+
+    The flat executor multiplies three sparse pieces per process, each
+    against a different dense operand (see core.dist_spmm):
+
+      diag — (m_p × k_p) against the local B block;
+      colp — (m_p × P·max_b) against the flat all_to_all receive buffer;
+      rowp — (P·max_c × k_q) against the local B block, producing the
+             partial-C send buffer.
+
+    Backends re-layout these CSRs into their native compute format
+    (padded COO, ELL blocks, ...) without touching the communication
+    schedule — the flat index spaces above ARE the schedule.
+    """
+    return {
+        "diag": list(plan.a_diag),
+        "colp": list(plan.a_colpart),
+        "rowp": list(plan.a_rowpart),
+    }
 
 
 def build_plan(

@@ -23,6 +23,7 @@ __all__ = [
     "csr_from_coo",
     "csr_from_dense",
     "bsr_from_csr",
+    "ell_from_csr",
     "random_sparse",
     "power_law_sparse",
     "hub_sparse",
@@ -232,6 +233,44 @@ def bsr_from_csr(a: CSRMatrix, block_shape: Tuple[int, int]) -> BSRMatrix:
         np.asarray(block_cols, dtype=np.int32),
         blocks_arr.astype(np.float32),
     )
+
+
+def ell_from_csr(a: CSRMatrix, block_shape: Tuple[int, int]) -> Tuple[np.ndarray, np.ndarray]:
+    """CSR → ELL block layout for the Pallas BSR kernel (kernels.bsr_spmm).
+
+    Returns ``(block_cols [mb, t], blocks [mb, t, bm, bk])``: every
+    block-row stores exactly ``t`` (bm × bk) dense blocks, ``-1`` in
+    ``block_cols`` marking all-zero padding slots. Edge blocks are
+    zero-padded; ``t ≥ 1`` so shapes never degenerate. Built directly from
+    coordinates (never densifies), so it scales to the planner's wide
+    flat-buffer pieces (m × P·max_b).
+    """
+    bm, bk = block_shape
+    m, k = a.shape
+    mb = (m + bm - 1) // bm
+    kb = (k + bk - 1) // bk
+    coo = a.to_coo()
+    if coo.nnz == 0:
+        return (np.full((mb, 1), -1, np.int32),
+                np.zeros((mb, 1, bm, bk), np.float32))
+    br = coo.row.astype(np.int64) // bm
+    bc = coo.col.astype(np.int64) // bk
+    key = br * kb + bc
+    uniq = np.unique(key)  # sorted ⇒ grouped by block-row
+    ubr, ubc = uniq // kb, uniq % kb
+    counts = np.bincount(ubr, minlength=mb)
+    t = max(1, int(counts.max()))
+    starts = np.zeros(mb + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    slot = np.arange(uniq.size) - starts[ubr]
+    block_cols = np.full((mb, t), -1, np.int32)
+    block_cols[ubr, slot] = ubc.astype(np.int32)
+    blocks = np.zeros((mb, t, bm, bk), np.float32)
+    blk_of_nz = np.searchsorted(uniq, key)
+    np.add.at(blocks,
+              (ubr[blk_of_nz], slot[blk_of_nz], coo.row % bm, coo.col % bk),
+              coo.val)
+    return block_cols, blocks
 
 
 # ---------------------------------------------------------------------------

@@ -16,8 +16,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence, Tuple
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..compat import with_sharding_constraint
 
 __all__ = ["DistContext", "make_context", "shard", "logical_to_spec"]
 
@@ -72,7 +73,7 @@ def shard(x, dist: Optional[DistContext], spec: Optional[P]):
     """with_sharding_constraint that degrades to identity when dist is None."""
     if dist is None or spec is None:
         return x
-    return jax.lax.with_sharding_constraint(x, NamedSharding(dist.mesh, spec))
+    return with_sharding_constraint(x, NamedSharding(dist.mesh, spec))
 
 
 def logical_to_spec(dist: Optional[DistContext], *roles: Optional[str]) -> Optional[P]:

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 __all__ = ["bsr_spmm_pallas"]
 
 
@@ -81,7 +83,7 @@ def bsr_spmm_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((mb * bm, n), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(block_cols, blocks, b3)

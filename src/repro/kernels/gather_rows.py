@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 __all__ = ["gather_rows_pallas"]
 
 
@@ -56,7 +58,7 @@ def gather_rows_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((s_total, n), b.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "parallel"),
         ),
     )(idx, b)

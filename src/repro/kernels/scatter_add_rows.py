@@ -25,6 +25,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 __all__ = ["scatter_add_rows_sorted_pallas", "prepare_sorted_scatter"]
 
 
@@ -91,7 +93,7 @@ def scatter_add_rows_sorted_pallas(
         out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
         interpret=interpret,
         input_output_aliases={2: 0},  # alias C (arg index counts scalar first)
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
     )(meta, partials_sorted, c)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import JAX_VERSION, cost_analysis
 from ..configs import ARCHS, get_config
 from ..distributed.context import make_context
 from ..distributed.sharding import (
@@ -116,6 +117,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "mode": shape.mode,
+        # records from different jax versions compile different HLO; tag
+        # them so §Roofline comparisons never mix compiler generations
+        "jax": ".".join(map(str, JAX_VERSION)),
     }
     status = cell_status(cfg, shape)
     rec["status"] = status
@@ -267,7 +271,7 @@ def _compile_one(cfg, shape, mesh, dist, t0, chips) -> Dict[str, Any]:
     compiled = lowered.compile()
     rec["compile_s"] = round(time.time() - t1, 2)
 
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis(compiled)
     coll = collective_bytes(compiled.as_text())
     rec["memory"] = _mem_dict(compiled.memory_analysis())
     rec["cost"] = {k: float(v) for k, v in cost.items()

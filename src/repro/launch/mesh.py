@@ -15,16 +15,17 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from ..compat import make_mesh as _compat_make_mesh
 
 __all__ = ["make_production_mesh", "make_mesh", "make_spmm_mesh"]
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
-    """jax.make_mesh with explicit Auto axis types (silences 0.9 warning)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    """Version-portable jax.make_mesh (explicit Auto axis types on jax≥0.5,
+    graceful fallback to a plain mesh on 0.4.x — see repro.compat)."""
+    return _compat_make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

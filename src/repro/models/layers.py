@@ -252,8 +252,9 @@ def attention_decode_seqshard(
     over its slice, and the partials combine with pmax/psum — the classic
     flash-decoding reduction. Per-chip cache traffic drops by M.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from ..compat import shard_map
 
     mesh, m_ax = dist.mesh, dist.model_axis
     b_ax = dist.batch_axes
@@ -298,8 +299,7 @@ def attention_decode_seqshard(
     cache_spec = P(b_ax, None, m_ax, None)
     fn = shard_map(body, mesh=mesh,
                    in_specs=(rep4, rep4, rep4, cache_spec, cache_spec, P()),
-                   out_specs=(rep4, cache_spec, cache_spec),
-                   check_vma=False)
+                   out_specs=(rep4, cache_spec, cache_spec))
     out, k_new, v_new = fn(q, kn, vn, cache.k, cache.v, cache.length)
     return out, KVCache(k_new, v_new, cache.length + 1)
 

@@ -86,7 +86,7 @@ def _moe_dense(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 def _moe_ep(params: dict, x: jax.Array, cfg: ModelConfig,
             dist: DistContext, shiro: bool) -> jax.Array:
     """Expert-parallel path via shard_map over the full mesh."""
-    from jax import shard_map
+    from ..compat import shard_map
 
     mesh = dist.mesh
     m_ax = dist.model_axis
@@ -114,7 +114,7 @@ def _moe_ep(params: dict, x: jax.Array, cfg: ModelConfig,
         body, mesh=mesh,
         in_specs=(bspec, P(), P(m_ax, None, None), P(m_ax, None, None),
                   P(m_ax, None, None)),
-        out_specs=bspec, check_vma=False)
+        out_specs=bspec)
     return fn(x, params["router"], params["w1"], params["w3"], params["w2"])
 
 

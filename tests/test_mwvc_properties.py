@@ -1,0 +1,86 @@
+"""Hypothesis property tests for the exact min vertex cover solvers.
+
+Paper §5.3 invariants over randomized bipartite graphs:
+  * validity — every edge (nonzero) is covered (Eq. 8);
+  * optimality — equals brute force on small instances;
+  * König — unweighted cover size == maximum matching size;
+  * dominance — μ ≤ min(|Rows|, |Cols|) (Eq. 11/12).
+
+Skipped wholesale when the optional ``hypothesis`` extra is absent —
+deterministic cases live in test_mwvc.py.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.mwvc import (  # noqa: E402
+    cover_is_valid, hopcroft_karp, min_vertex_cover_unweighted,
+    min_vertex_cover_weighted,
+)
+
+
+def brute_force_cover(nl, nr, eu, ev, wl, wr):
+    best = float("inf")
+    for mask in range(1 << (nl + nr)):
+        L = np.array([(mask >> i) & 1 for i in range(nl)], bool)
+        R = np.array([(mask >> (nl + j)) & 1 for j in range(nr)], bool)
+        if cover_is_valid(eu, ev, L, R):
+            best = min(best, wl[L].sum() + wr[R].sum())
+    return best
+
+
+edges_strategy = st.integers(1, 5).flatmap(
+    lambda nl: st.integers(1, 5).flatmap(
+        lambda nr: st.tuples(
+            st.just(nl), st.just(nr),
+            st.lists(st.tuples(st.integers(0, nl - 1), st.integers(0, nr - 1)),
+                     min_size=0, max_size=12))))
+
+
+@settings(max_examples=150, deadline=None)
+@given(edges_strategy, st.integers(0, 2 ** 31 - 1))
+def test_weighted_cover_optimal(g, seed):
+    nl, nr, edges = g
+    eu = np.array([e[0] for e in edges], np.int64)
+    ev = np.array([e[1] for e in edges], np.int64)
+    rng = np.random.default_rng(seed)
+    wl = rng.integers(1, 6, nl).astype(float)
+    wr = rng.integers(1, 6, nr).astype(float)
+    cl, cr = min_vertex_cover_weighted(nl, nr, eu, ev, wl, wr)
+    assert cover_is_valid(eu, ev, cl, cr)
+    got = wl[cl].sum() + wr[cr].sum()
+    want = brute_force_cover(nl, nr, eu, ev, wl, wr)
+    assert abs(got - want) < 1e-9
+
+
+@settings(max_examples=150, deadline=None)
+@given(edges_strategy)
+def test_unweighted_cover_konig(g):
+    nl, nr, edges = g
+    eu = np.array([e[0] for e in edges], np.int64)
+    ev = np.array([e[1] for e in edges], np.int64)
+    cl, cr = min_vertex_cover_unweighted(nl, nr, eu, ev)
+    assert cover_is_valid(eu, ev, cl, cr)
+    if len(edges):
+        ml, _ = hopcroft_karp(nl, nr, eu, ev)
+        matching = int((ml >= 0).sum())
+        assert int(cl.sum() + cr.sum()) == matching  # König's theorem
+    else:
+        assert cl.sum() + cr.sum() == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(edges_strategy)
+def test_cover_dominates_single_dimension(g):
+    """mu <= min(|Rows|, |Cols|) — paper Eq. 11/12."""
+    nl, nr, edges = g
+    if not edges:
+        return
+    eu = np.array([e[0] for e in edges], np.int64)
+    ev = np.array([e[1] for e in edges], np.int64)
+    cl, cr = min_vertex_cover_unweighted(nl, nr, eu, ev)
+    mu = int(cl.sum() + cr.sum())
+    assert mu <= len(np.unique(eu))
+    assert mu <= len(np.unique(ev))

@@ -1,0 +1,20 @@
+"""Hypothesis property sweeps for the planner (paper Eq. 9 dominance).
+
+Skipped wholesale when the optional ``hypothesis`` extra is absent —
+deterministic planner invariants live in test_planner.py.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.comm_model import strategy_volumes  # noqa: E402
+from repro.core.sparse import power_law_sparse  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10000))
+def test_joint_never_worse_property(seed):
+    a = power_law_sparse(40, 40, 200, 1.4, seed)
+    vols = strategy_volumes(a, P=4, n_dense=2)
+    assert vols["joint"] <= min(vols["col"], vols["row"])
