@@ -19,10 +19,18 @@ def run() -> list:
         us = time_call(strategy_volumes, a, P, N_DENSE, warmup=0, iters=1)
         vols = strategy_volumes(a, P, N_DENSE)
         red = 100.0 * (1 - vols["joint"] / max(vols["col"], 1))
+        # analytic (Eq. 9) vs EXECUTED bytes under the two schedule
+        # realizations: the single max-padded all_to_all round and the
+        # skew-aware bucketed ppermute rounds (core.comm_schedule)
+        pad_red = 100.0 * (1 - vols["joint_padded_bucketed"]
+                           / max(vols["joint_padded"], 1))
         rows.append(fmt_row(
             f"fig8a/{ds}", us,
             f"col={vols['col']};joint={vols['joint']};"
-            f"block={vols['block']};reduction={red:.1f}%"))
+            f"block={vols['block']};reduction={red:.1f}%;"
+            f"padded_single={vols['joint_padded']};"
+            f"padded_bucketed={vols['joint_padded_bucketed']};"
+            f"padding_cut={pad_red:.1f}%"))
 
         plan = build_plan(a, P, "joint")
         hier = build_hier_plan(plan, G=8, L=4)  # 8 nodes x 4 GPUs

@@ -14,29 +14,98 @@ Prints ``name,us_per_call,derived`` CSV. Figures covered:
   Fig. 11 dense-column sensitivity         (fig11_ncols)
   Tab. 3  GNN case study + prep overhead   (table3_gnn)
   extra   SHIRO MoE dispatch (beyond-paper) (moe_dispatch)
+  extra   bucketed-schedule padding sweep   (sched_buckets)
+
+Flags:
+  --only MODULE   run a subset (repeatable; short names, e.g.
+                  ``--only fig8_volume --only sched_buckets``)
+  --json PATH     additionally write machine-readable BENCH records:
+                  every CSV row becomes {"bench", "us_per_call", fields
+                  parsed from the key=value derived string} — the format
+                  CI diffs across PRs to catch schedule regressions.
 """
+import argparse
+import json
 import sys
 import traceback
 
 
-def main() -> None:
+def _parse_derived(derived: str) -> dict:
+    """'k1=v1;k2=v2' -> {k1: v1, ...} with numeric coercion."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        v = v.rstrip("%")
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def _records(rows) -> list:
+    recs = []
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        rec = {"bench": f"BENCH_{name}", "us_per_call": float(us)}
+        rec.update(_parse_derived(derived))
+        recs.append(rec)
+    return recs
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="SHIRO benchmark harness (one module per figure)")
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="MODULE",
+                    help="run only these benchmark modules (repeatable)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_* records as JSON to PATH")
+    args = ap.parse_args(argv)
+
     from . import (fig5_patterns, fig7_scaling, fig8_volume, fig9_balance,
-                   fig10_ablation, fig11_ncols, table3_gnn, moe_dispatch)
+                   fig10_ablation, fig11_ncols, table3_gnn, moe_dispatch,
+                   sched_buckets)
     modules = [fig5_patterns, fig7_scaling, fig8_volume, fig9_balance,
-               fig10_ablation, fig11_ncols, table3_gnn, moe_dispatch]
+               fig10_ablation, fig11_ncols, table3_gnn, moe_dispatch,
+               sched_buckets]
+    if args.only:
+        short = {m.__name__.rsplit(".", 1)[-1]: m for m in modules}
+        unknown = [o for o in args.only if o not in short]
+        if unknown:
+            raise SystemExit(
+                f"unknown benchmark module(s) {unknown}; "
+                f"available: {sorted(short)}")
+        modules = [short[o] for o in args.only]
+
     print("name,us_per_call,derived")
     failed = 0
+    records = []
     for mod in modules:
+        rows = []
         try:
             for row in mod.run():
                 print(row, flush=True)
+                rows.append(row)
             if hasattr(mod, "run_group_aware"):
                 for row in mod.run_group_aware():
                     print(row, flush=True)
+                    rows.append(row)
         except Exception:
             failed += 1
             print(f"{mod.__name__},nan,ERROR", flush=True)
             traceback.print_exc(file=sys.stderr)
+        records += _records(rows)  # keep whatever the module got out
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"records": records}, f, indent=1, sort_keys=True)
+        print(f"wrote {len(records)} records to {args.json}",
+              file=sys.stderr)
     if failed:
         sys.exit(1)
 

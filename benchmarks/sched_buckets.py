@@ -1,0 +1,59 @@
+"""Bucketed-schedule padding sweep (beyond-paper; complements Fig. 8).
+
+For each dataset family at P=8: the single max-padded all_to_all round's
+operand rows vs bucketed ppermute schedules for K = 1..4 slot classes,
+the analytic SHIRO volume (ideal, Eq. 9), and the α-β modeled time per
+K — the numbers ``comm_model.choose_schedule`` optimizes over. The
+derived field is machine-readable ``key=value`` pairs, so the --json
+harness mode turns each row into a BENCH record tracking the padding
+waste trajectory across PRs.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core.comm_model import (
+    TSUBAME_LIKE, choose_schedule, modeled_time_schedule,
+)
+from repro.core.comm_schedule import build_comm_schedule, single_round_schedule
+from repro.core.planner import build_plan
+
+from .common import DATASETS, fmt_row, time_call
+
+P = 8
+N_DENSE = 64
+SMOKE_DATASETS = ("social-pl", "mawi-hub")  # the CI smoke subset
+
+
+def run(datasets=None) -> list:
+    rows = []
+    if datasets is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+        datasets = SMOKE_DATASETS if smoke else list(DATASETS)
+    names = datasets
+    for ds in names:
+        a = DATASETS[ds](0)
+        us = time_call(build_plan, a, P, "joint", warmup=0, iters=1)
+        plan = build_plan(a, P, "joint")
+        ideal = plan.volume_rows()
+        single = single_round_schedule(plan)
+        rows.append(fmt_row(
+            f"sched/{ds}/single", us,
+            f"padded_rows={single.volume_rows_padded()};"
+            f"ideal_rows={ideal};"
+            f"modeled_time={modeled_time_schedule(plan, single, N_DENSE, TSUBAME_LIKE):.3e}"))
+        for K in (1, 2, 4):
+            sched = build_comm_schedule(plan, K=K)
+            t = modeled_time_schedule(plan, sched, N_DENSE, TSUBAME_LIKE)
+            rows.append(fmt_row(
+                f"sched/{ds}/K{K}", 0.0,
+                f"padded_rows={sched.volume_rows_padded()};"
+                f"ideal_rows={ideal};rounds={len(sched.rounds)};"
+                f"modeled_time={t:.3e}"))
+        best, t_best = choose_schedule(plan, N_DENSE, TSUBAME_LIKE)
+        rows.append(fmt_row(
+            f"sched/{ds}/chosen", 0.0,
+            f"kind={best.kind};K={best.K};"
+            f"padded_rows={best.volume_rows_padded()};"
+            f"ideal_rows={ideal};modeled_time={t_best:.3e}"))
+    return rows

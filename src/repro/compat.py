@@ -34,6 +34,7 @@ __all__ = [
     "with_sharding_constraint",
     "all_to_all",
     "psum_scatter",
+    "ppermute",
     "tpu_compiler_params",
     "cost_analysis",
 ]
@@ -136,6 +137,18 @@ def psum_scatter(x: jax.Array, axis_name: str, *, scatter_dimension: int = 0,
     return jax.lax.psum_scatter(x, axis_name,
                                 scatter_dimension=scatter_dimension,
                                 tiled=tiled)
+
+
+def ppermute(x: jax.Array, axis_name: str,
+             perm: Sequence[Tuple[int, int]]) -> jax.Array:
+    """``jax.lax.ppermute`` — one (src, dst) matching = one collective.
+
+    The bucketed communication schedules (core.comm_schedule) are built
+    from shift permutations ``[(q, (q + d) % P) for q]``; receivers not
+    named in ``perm`` get zeros, which is exactly the padding semantics
+    the schedules rely on.
+    """
+    return jax.lax.ppermute(x, axis_name, perm)
 
 
 def cost_analysis(compiled) -> dict:

@@ -4,6 +4,8 @@ Public API:
   sparse containers  — CSRMatrix, COOMatrix, BSRMatrix + generators
   exact covers       — min_vertex_cover_{unweighted,weighted} (König / Dinic)
   offline planning   — build_plan / build_hier_plan (paper §5-§6 preprocessing)
+  comm schedules     — build_comm_schedule / choose_schedule (skew-aware
+                       bucketed ppermute rounds vs the single padded a2a)
   execution          — flat_spmm / hier_spmm (shard_map, jit/lower-clean)
   analytics          — strategy_volumes, modeled_time, balance_stats
 """
@@ -28,6 +30,11 @@ from .local_backend import (
 from .comm_model import (
     NetworkSpec, TSUBAME_LIKE, TPU_POD, AURORA_LIKE,
     strategy_volumes, modeled_time, modeled_time_hier, balance_stats,
+    modeled_time_schedule, choose_schedule,
+)
+from .comm_schedule import (
+    CommRound, CommSchedule, build_comm_schedule, build_hier_comm_schedule,
+    single_round_schedule, single_round_hier_schedule,
 )
 from .dist_spmm import (
     FlatExecPlan, HierExecPlan, flat_exec_arrays, hier_exec_arrays,
@@ -47,6 +54,10 @@ __all__ = [
     "get_backend", "register_backend", "available_backends",
     "NetworkSpec", "TSUBAME_LIKE", "TPU_POD", "AURORA_LIKE",
     "strategy_volumes", "modeled_time", "modeled_time_hier", "balance_stats",
+    "modeled_time_schedule", "choose_schedule",
+    "CommRound", "CommSchedule", "build_comm_schedule",
+    "build_hier_comm_schedule", "single_round_schedule",
+    "single_round_hier_schedule",
     "FlatExecPlan", "HierExecPlan", "flat_exec_arrays", "hier_exec_arrays",
     "flat_spmm", "hier_spmm", "coo_spmm_local",
 ]

@@ -17,6 +17,9 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .comm_schedule import (
+    CommSchedule, build_comm_schedule, single_round_schedule,
+)
 from .planner import SpmmPlan, build_plan
 from .hierarchy import HierPlan
 from .sparse import CSRMatrix, block_rows
@@ -29,6 +32,8 @@ __all__ = [
     "strategy_volumes",
     "modeled_time",
     "modeled_time_hier",
+    "modeled_time_schedule",
+    "choose_schedule",
     "balance_stats",
 ]
 
@@ -75,6 +80,9 @@ def strategy_volumes(
     out["row"] = v_row * n_dense * sz_dt
     out["joint"] = joint.volume_rows() * n_dense * sz_dt  # Eq. 9: mu·N·sz
     out["joint_padded"] = joint.volume_rows_padded() * n_dense * sz_dt
+    bucketed = build_comm_schedule(joint, K=4)
+    out["joint_padded_bucketed"] = (
+        joint.volume_rows_padded(bucketed) * n_dense * sz_dt)
     return out
 
 
@@ -152,6 +160,80 @@ def modeled_time_hier(
     t_comp = nnz_local * 2.0 * n_dense / flop_rate
     t_comm = stage1 + stage2
     return max(t_comm, t_comp) + 0.25 * min(t_comm, t_comp)
+
+
+def _tier(net: NetworkSpec, P: int) -> Tuple[float, float]:
+    """(bandwidth, latency) of the tier a P-process exchange runs on."""
+    if P <= net.group_size:
+        return net.bw_intra, net.lat_intra
+    return net.bw_inter, net.lat_inter
+
+
+def modeled_time_schedule(
+    plan: SpmmPlan,
+    sched: CommSchedule,
+    n_dense: int,
+    net: NetworkSpec,
+    sz_dt: int = 4,
+) -> float:
+    """α-β communication time of one schedule realization.
+
+    ``single``: two max-padded all_to_alls — per-process bytes
+    ``P (max_b + max_c) · N · sz`` behind 2 α terms (one per part).
+    ``bucketed``: each round is charged the same way — one α per PART it
+    carries traffic on (the B exchange and the C exchange are separate
+    program phases; a round's shift permutes within one phase are
+    disjoint matchings and overlap), plus the round's padded
+    per-process bytes. More rounds → finer slot classes → fewer padded
+    bytes but more α terms; this is the trade ``choose_schedule``
+    optimizes over K, with latency accounted consistently across both
+    schedule kinds.
+    """
+    unit = n_dense * sz_dt
+    bw, lat = _tier(net, plan.P)
+    if sched.kind == "single":
+        rows = sched.P * (sched.max_b + sched.max_c)
+        return 2 * lat + rows * unit / bw
+    t = 0.0
+    for rnd in sched.rounds:
+        rows = sum(sched.slots_b[d - 1] + sched.slots_c[d - 1]
+                   for d in rnd.shifts)
+        phases = (any(sched.slots_b[d - 1] > 0 for d in rnd.shifts)
+                  + any(sched.slots_c[d - 1] > 0 for d in rnd.shifts))
+        t += phases * lat + rows * unit / bw
+    return t
+
+
+def choose_schedule(
+    plan: SpmmPlan,
+    n_dense: int,
+    net: NetworkSpec,
+    k_max: int = 4,
+    sz_dt: int = 4,
+) -> Tuple[CommSchedule, float]:
+    """Pick the fastest schedule realization under the α-β model.
+
+    Candidates: the single max-padded all_to_all round and bucketed
+    schedules for K = 1..k_max slot classes. Returns (schedule,
+    modeled_seconds). On balanced patterns the single round usually wins
+    (fewer α terms, no padding to shave); on skewed patterns a small K
+    already removes most padded bytes — mirroring the paper's flat-vs-
+    hier discussion (§7.7) one level down.
+    """
+    single = single_round_schedule(plan)
+    best: Tuple[CommSchedule, float] = (
+        single, modeled_time_schedule(plan, single, n_dense, net, sz_dt))
+    seen = set()
+    for K in range(1, max(1, k_max) + 1):
+        sched = build_comm_schedule(plan, K=K)
+        key = (sched.slots_b, sched.slots_c)
+        if key in seen:
+            continue
+        seen.add(key)
+        t = modeled_time_schedule(plan, sched, n_dense, net, sz_dt)
+        if t < best[1]:
+            best = (sched, t)
+    return best
 
 
 def balance_stats(plan: SpmmPlan) -> Dict[str, float]:

@@ -1,0 +1,560 @@
+"""Skew-aware bucketed communication schedules (beyond-paper §5 extension).
+
+The offline planner (core.planner) pads every (src, dst) pair to the
+GLOBAL slot maxima ``max_b`` / ``max_c`` so a single ``all_to_all`` stays
+jit-static. On skewed patterns (power-law / hub matrices, the Fig. 9
+imbalance ``comm_model.balance_stats`` measures) that wastes an order of
+magnitude on the wire: the dense all_to_all operand carries
+``P · (max_b + max_c)`` rows per process while the analytic SHIRO volume
+(paper Eq. 9) is ``Σ μ``.
+
+This module replaces the one max-padded round with a **multi-round
+schedule** that is still fully static:
+
+* the complete (src, dst) exchange graph decomposes into its P-1
+  *shift* classes — shift ``d`` pairs every source ``q`` with destination
+  ``(q + d) % P``, a perfect matching realized by one
+  ``jax.lax.ppermute``;
+* each shift only needs its OWN slot maximum (the largest pair it
+  carries), not the global one, so executed padded rows drop from
+  ``P·(P-1)·max`` toward ``P·Σ_d max_d``;
+* shifts are then binned into ``K`` rounds of similar slot demand
+  (optimal 1-D partition, not just geometric guesses); every shift in a
+  round shares the round's slot ceiling. ``K`` trades residual padding
+  (smaller with more rounds) against launch latency (one α term per
+  round) — ``comm_model.choose_schedule`` picks it from the α-β model.
+* empty shifts (no communicated rows) vanish from the schedule entirely —
+  the dense all_to_all could never skip them.
+
+The executors (core.dist_spmm) unroll the rounds statically, so the
+lowered HLO contains one ``collective-permute`` per non-empty shift and
+shapes never depend on data. ``CommSchedule`` is a hashable pure-int
+structure and rides in the exec plans' static metadata.
+
+The same treatment applies to the hierarchical inter-group collectives
+(``build_hier_comm_schedule``): group-shift 0 — data for the process's
+OWN group, which the dense all_to_all shipped through the network — is
+served by a local slice instead of a collective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .hierarchy import HierPlan
+from .planner import SpmmPlan
+
+__all__ = [
+    "CommRound",
+    "CommSchedule",
+    "shift_slot_demands",
+    "group_shift_slot_demands",
+    "partition_slots",
+    "build_comm_schedule",
+    "build_hier_comm_schedule",
+    "flat_schedule_layout",
+    "hier_schedule_layout",
+]
+
+
+# ---------------------------------------------------------------------------
+# schedule structure (hashable: rides in jit-static exec-plan metadata)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CommRound:
+    """One statically-unrolled communication round.
+
+    ``shifts`` lists the shift classes served this round (shift ``d``
+    moves src ``q`` → dst ``(q + d) % P`` — a perfect matching, one
+    ppermute). ``slot_b`` / ``slot_c`` are the round's shared slot
+    ceilings: every listed shift's B / C segment is padded to them,
+    except that a shift with zero demand on one part keeps slot 0 there
+    (no segment at all — see ``CommSchedule.slots_b`` / ``slots_c`` for
+    the per-shift truth).
+    """
+
+    shifts: Tuple[int, ...]
+    slot_b: int
+    slot_c: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSchedule:
+    """Static multi-round schedule for one executor tier.
+
+    ``kind``:
+      * ``"single"``  — the legacy one-round max-padded all_to_all pair;
+        ``rounds`` is empty and ``max_b`` / ``max_c`` carry the layout.
+      * ``"bucketed"`` — K ppermute rounds; shift ``d``'s slot sizes are
+        ``slots_b[d-1]`` / ``slots_c[d-1]`` (0 = shift not scheduled).
+
+    ``P`` is the number of ranks on the scheduled axis (the group count
+    G for hierarchical inter-group schedules, where shift 0 data is
+    served locally and therefore never appears in ``rounds``).
+    ``procs`` is the number of PROCESSES placing operands — equal to
+    ``P`` for flat schedules, ``G·L`` for hierarchical ones (every group
+    member runs the group-axis collectives); 0 means "same as P".
+    """
+
+    kind: str
+    P: int
+    max_b: int
+    max_c: int
+    slots_b: Tuple[int, ...] = ()
+    slots_c: Tuple[int, ...] = ()
+    rounds: Tuple[CommRound, ...] = ()
+    local_slot_b: int = 0  # hier only: shift-0 (own group) slot width
+    local_slot_c: int = 0
+    procs: int = 0
+
+    @property
+    def K(self) -> int:
+        return len(self.rounds) if self.kind == "bucketed" else 1
+
+    # ----- padded-volume accounting (operand rows, matches the HLO) ----
+    def rows_per_process(self) -> int:
+        """Rows each process places into collective operands.
+
+        ``single``: the all_to_all operand is [P, max, N] — including the
+        always-empty self slot the dense collective cannot drop.
+        ``bucketed``: one [slot_d, N] ppermute operand per scheduled
+        shift; local (shift-0) slices never hit the wire.
+        """
+        if self.kind == "single":
+            return self.P * (self.max_b + self.max_c)
+        return int(sum(self.slots_b) + sum(self.slots_c))
+
+    def volume_rows_padded(self) -> int:
+        """Total rows in collective operands across all processes."""
+        return (self.procs or self.P) * self.rows_per_process()
+
+
+# ---------------------------------------------------------------------------
+# per-shift slot demands
+# ---------------------------------------------------------------------------
+
+
+def shift_slot_demands(plan: SpmmPlan) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-shift slot maxima (sb[d-1], sc[d-1]) for d = 1..P-1.
+
+    Shift ``d`` carries every pair (dst=(q+d)%P, src=q); its slot demand
+    is the largest per-pair row count among them — the only padding a
+    shift-structured round ever needs.
+    """
+    P = plan.P
+    nb = np.zeros((P, P), np.int64)
+    nc = np.zeros((P, P), np.int64)
+    for (p, q), pp in plan.pair_plans.items():
+        nb[q, p] = pp.col_ids.size
+        nc[q, p] = pp.row_ids.size
+    sb = np.zeros(P - 1, np.int64)
+    sc = np.zeros(P - 1, np.int64)
+    for d in range(1, P):
+        dsts = (np.arange(P) + d) % P
+        sb[d - 1] = nb[np.arange(P), dsts].max()
+        sc[d - 1] = nc[np.arange(P), dsts].max()
+    return sb, sc
+
+
+def group_shift_slot_demands(hier: HierPlan) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-group-shift slot maxima for the hier inter-group collectives.
+
+    Returns ``(sbg, scg)`` of length G, index = group shift ``dg``
+    (0 = own group, served locally by the bucketed executor).
+    """
+    G, L = hier.G, hier.L
+    P = hier.base.P
+    sbg = np.zeros(G, np.int64)
+    scg = np.zeros(G, np.int64)
+    b_counts = (hier.b_group_send_idx >= 0).sum(axis=2)  # [P(src), G(dst)]
+    c_counts = (hier.c_group_rows >= 0).sum(axis=2)  # [G(src), P(dst)]
+    for q in range(P):
+        gs = q // L
+        for gd in range(G):
+            dg = (gd - gs) % G
+            sbg[dg] = max(sbg[dg], int(b_counts[q, gd]))
+    for gs in range(G):
+        for dst in range(P):
+            dg = (dst // L - gs) % G
+            scg[dg] = max(scg[dg], int(c_counts[gs, dst]))
+    return sbg, scg
+
+
+# ---------------------------------------------------------------------------
+# bucketing: optimal K-way partition of sorted slot demands
+# ---------------------------------------------------------------------------
+
+
+def partition_slots(demands_b: np.ndarray, demands_c: np.ndarray,
+                    K: int) -> List[Tuple[Tuple[int, ...], int, int]]:
+    """Bin shifts into ≤K rounds minimizing total padded slots.
+
+    Returns ``[(shift_indices, slot_b_ceiling, slot_c_ceiling), ...]``
+    with AT MOST K entries — one α term per entry, which is the contract
+    ``modeled_time_schedule`` charges for. Shifts with no demand on
+    either part are dropped (they need no round at all). Shifts are
+    sorted by combined demand and split into ≤K contiguous classes by a
+    tiny DP minimizing the executed padded rows over this ordering —
+    each member shift pays its class ceiling only on parts where it has
+    demand (zero-demand parts emit no segment, see ``_make_rounds``);
+    better than fixed geometric ceilings on real skew.
+    """
+    if K < 1:
+        raise ValueError(f"K must be >= 1, got {K}")
+    idx = [i for i in range(len(demands_b))
+           if demands_b[i] > 0 or demands_c[i] > 0]
+    if not idx:
+        return []
+    order = sorted(idx, key=lambda i: (int(demands_b[i]) + int(demands_c[i]),
+                                       int(demands_b[i])))
+    n = len(order)
+    K = min(K, n)
+
+    def cls_cost(i: int, j: int) -> int:  # class = order[i:j]
+        mb = max(int(demands_b[t]) for t in order[i:j])
+        mc = max(int(demands_c[t]) for t in order[i:j])
+        return sum((mb if demands_b[t] > 0 else 0)
+                   + (mc if demands_c[t] > 0 else 0)
+                   for t in order[i:j])
+
+    INF = float("inf")
+    dp = [[INF] * (K + 1) for _ in range(n + 1)]
+    cut = [[0] * (K + 1) for _ in range(n + 1)]
+    dp[0][0] = 0.0
+    for j in range(1, n + 1):
+        for k in range(1, K + 1):
+            for i in range(j):
+                if dp[i][k - 1] == INF:
+                    continue
+                cost = dp[i][k - 1] + cls_cost(i, j)
+                if cost < dp[j][k]:
+                    dp[j][k] = cost
+                    cut[j][k] = i
+    best_k = min(range(1, K + 1), key=lambda k: dp[n][k])
+    bounds = []
+    j = n
+    for k in range(best_k, 0, -1):
+        i = cut[j][k]
+        bounds.append((i, j))
+        j = i
+    out = []
+    for (i, j) in sorted(bounds):
+        members = tuple(sorted(order[i:j]))
+        mb = max(int(demands_b[t]) for t in members)
+        mc = max(int(demands_c[t]) for t in members)
+        out.append((members, mb, mc))
+    return out
+
+
+def _make_rounds(demands_b: np.ndarray, demands_c: np.ndarray,
+                 K: int) -> Tuple[Tuple[int, ...], Tuple[int, ...],
+                                  Tuple[CommRound, ...]]:
+    """≤K rounds over the scheduled shifts, plus per-shift slot tables.
+
+    A shift's B (C) segment is padded to its round's slot_b (slot_c) —
+    except that a part with ZERO demand on that shift keeps slot 0: no
+    segment, no wire bytes, whatever its round ceiling says.
+    """
+    parts = partition_slots(demands_b, demands_c, K)
+    sb_final = [0] * len(demands_b)
+    sc_final = [0] * len(demands_c)
+    rounds = []
+    for members, mb, mc in parts:
+        for i in members:
+            sb_final[i] = mb if demands_b[i] > 0 else 0
+            sc_final[i] = mc if demands_c[i] > 0 else 0
+        rounds.append(CommRound(shifts=tuple(d + 1 for d in members),
+                                slot_b=mb, slot_c=mc))
+    return tuple(sb_final), tuple(sc_final), tuple(rounds)
+
+
+def build_comm_schedule(plan: SpmmPlan, K: int = 4) -> CommSchedule:
+    """Bucketed K-round schedule for the flat executor.
+
+    ``K`` bounds the number of distinct slot classes per part; rounds
+    merge shifts whose (slot_b, slot_c) ceilings coincide. ``K`` large
+    enough (≥ the number of distinct demands) yields exact per-shift
+    slots; ``K=1`` pads every scheduled shift to the global maximum —
+    still ahead of the all_to_all, which additionally carries the self
+    slot and empty shifts.
+    """
+    sb, sc = shift_slot_demands(plan)
+    slots_b, slots_c, rounds = _make_rounds(sb, sc, K)
+    return CommSchedule(
+        kind="bucketed", P=plan.P, max_b=plan.max_b, max_c=plan.max_c,
+        slots_b=slots_b, slots_c=slots_c, rounds=rounds,
+    )
+
+
+def single_round_schedule(plan: SpmmPlan) -> CommSchedule:
+    """The legacy max-padded all_to_all as a CommSchedule (for accounting)."""
+    return CommSchedule(kind="single", P=plan.P,
+                        max_b=plan.max_b, max_c=plan.max_c)
+
+
+def build_hier_comm_schedule(hier: HierPlan, K: int = 4) -> CommSchedule:
+    """Bucketed schedule for the hierarchical INTER-GROUP collectives.
+
+    Scheduled shifts run over the group axis (1..G-1); group-shift 0 —
+    traffic whose source and destination share a group — becomes a local
+    slice with its own slot width (``local_slot_*``) instead of a wire
+    round.
+    """
+    sbg, scg = group_shift_slot_demands(hier)
+    slots_b, slots_c, rounds = _make_rounds(sbg[1:], scg[1:], K)
+    return CommSchedule(
+        kind="bucketed", P=hier.G, max_b=hier.max_bg, max_c=hier.max_cg,
+        slots_b=slots_b, slots_c=slots_c, rounds=rounds,
+        local_slot_b=int(sbg[0]), local_slot_c=int(scg[0]),
+        procs=hier.base.P,
+    )
+
+
+def single_round_hier_schedule(hier: HierPlan) -> CommSchedule:
+    return CommSchedule(kind="single", P=hier.G,
+                        max_b=hier.max_bg, max_c=hier.max_cg,
+                        procs=hier.base.P)
+
+
+__all__ += ["single_round_schedule", "single_round_hier_schedule"]
+
+
+# ---------------------------------------------------------------------------
+# buffer layouts: flat index spaces for the bucketed executors
+# ---------------------------------------------------------------------------
+
+
+def _segment_offsets(slots: Sequence[int], lead: int = 0
+                     ) -> Tuple[Dict[int, Tuple[int, int]], int]:
+    """{shift: (offset, slot)} over the concatenated per-shift segments.
+
+    ``lead`` reserves a leading local segment (hier shift 0).
+    """
+    out: Dict[int, Tuple[int, int]] = {}
+    off = lead
+    for i, s in enumerate(slots):
+        if s > 0:
+            out[i + 1] = (off, int(s))
+            off += int(s)
+    return out, off
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatScheduleLayout:
+    """Host-side arrays realizing a bucketed CommSchedule for flat_spmm.
+
+    Index spaces (R_b = Σ slots_b, R_c = Σ slots_c, both ≥ 1):
+
+      b_send_idx [P, R_b]  — local B row packed into send segment
+                             (shift d at offset off_b[d]), -1 pad;
+      c_recv_rows [P, R_c] — dest-local C row for each receive slot
+                             (segment d arrives from src (p-d)%P), -1 pad;
+      colp / rowp          — the planner's off-diagonal pieces with
+                             columns / rows remapped into the bucketed
+                             receive / send spaces.
+    """
+
+    schedule: CommSchedule
+    off_b: Dict[int, Tuple[int, int]]
+    off_c: Dict[int, Tuple[int, int]]
+    R_b: int
+    R_c: int
+    b_send_idx: np.ndarray
+    c_recv_rows: np.ndarray
+    colp: list
+    rowp: list
+
+
+def flat_schedule_layout(plan: SpmmPlan, sched: CommSchedule
+                         ) -> FlatScheduleLayout:
+    """Materialize send maps + remapped pieces for a bucketed flat plan."""
+    from .sparse import COOMatrix, CSRMatrix, csr_from_coo
+
+    if sched.kind != "bucketed":
+        raise ValueError("flat_schedule_layout needs a bucketed schedule")
+    P = plan.P
+    off_b, R_b = _segment_offsets(sched.slots_b)
+    off_c, R_c = _segment_offsets(sched.slots_c)
+    R_b = max(R_b, 1)
+    R_c = max(R_c, 1)
+
+    # dense offset tables indexed by shift (-1 = shift not scheduled)
+    boff = np.full(P, -1, np.int64)
+    coff = np.full(P, -1, np.int64)
+    for d, (off, _) in off_b.items():
+        boff[d] = off
+    for d, (off, _) in off_c.items():
+        coff[d] = off
+
+    b_send_idx = np.full((P, R_b), -1, np.int32)
+    c_recv_rows = np.full((P, R_c), -1, np.int32)
+    for (p, q), pp in plan.pair_plans.items():
+        d = (p - q) % P
+        if pp.col_ids.size:
+            off, slot = off_b[d]
+            assert pp.col_ids.size <= slot
+            b_send_idx[q, off:off + pp.col_ids.size] = pp.col_ids
+        if pp.row_ids.size:
+            off, slot = off_c[d]
+            assert pp.row_ids.size <= slot
+            c_recv_rows[p, off:off + pp.row_ids.size] = pp.row_ids
+
+    # colp: flat col (q·max_b + slot) -> off_b[(p-q)%P] + slot
+    colp: List = []
+    for p in range(P):
+        csr = plan.a_colpart[p]
+        coo = csr.to_coo()
+        flat = coo.col.astype(np.int64)
+        qs = flat // plan.max_b
+        slots = flat % plan.max_b
+        new_cols = boff[(p - qs) % P] + slots
+        assert csr.nnz == 0 or new_cols.min() >= 0
+        colp.append(csr_from_coo(COOMatrix(
+            (csr.shape[0], R_b), coo.row,
+            new_cols.astype(np.int32), coo.val)))
+
+    # rowp: flat row (p·max_c + slot) -> off_c[(p-q)%P] + slot at source q
+    rowp: List = []
+    for q in range(P):
+        csr = plan.a_rowpart[q]
+        coo = csr.to_coo()
+        flat = coo.row.astype(np.int64)
+        ps = flat // plan.max_c
+        slots = flat % plan.max_c
+        new_rows = coff[(ps - q) % P] + slots
+        assert csr.nnz == 0 or new_rows.min() >= 0
+        rowp.append(csr_from_coo(COOMatrix(
+            (R_c, csr.shape[1]), new_rows.astype(np.int32),
+            coo.col, coo.val)))
+
+    return FlatScheduleLayout(
+        schedule=sched, off_b=off_b, off_c=off_c, R_b=R_b, R_c=R_c,
+        b_send_idx=b_send_idx, c_recv_rows=c_recv_rows,
+        colp=colp, rowp=rowp,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class HierScheduleLayout:
+    """Bucketed layout for the hierarchical inter-group collectives.
+
+    R_bg / R_cg include the leading shift-0 (own-group) segment, which
+    the executor serves with a local slice instead of a ppermute.
+
+      b_send_idx [P, R_bg]      — local B row per send slot (group-shift
+                                  segments, -1 pad);
+      c_recv_rows [P, R_cg]     — dest-local C row per receive slot;
+      colp                      — columns remapped to the post-all_gather
+                                  space (l_src · R_bg + off_bg[dg] + slot);
+      rowp                      — the intra-group psum_scatter keeps its
+                                  uniform max_cg slot layout, but rows
+                                  are re-keyed SHIFT-major,
+                                  (dg·L + l_dst)·max_cg + group_slot, so
+                                  the aggregated tile for group shift dg
+                                  lands at agg[dg] on every source —
+                                  ready for a static per-shift ppermute
+                                  without consulting the runtime group
+                                  index.
+    """
+
+    schedule: CommSchedule
+    off_bg: Dict[int, Tuple[int, int]]
+    off_cg: Dict[int, Tuple[int, int]]
+    R_bg: int
+    R_cg: int
+    b_send_idx: np.ndarray
+    c_recv_rows: np.ndarray
+    colp: list
+    rowp: list
+
+
+def hier_schedule_layout(hier: HierPlan, sched: CommSchedule
+                         ) -> HierScheduleLayout:
+    """Materialize the bucketed inter-group layout for hier_spmm."""
+    from .hierarchy import hier_piece_csrs
+    from .sparse import COOMatrix, csr_from_coo
+
+    if sched.kind != "bucketed":
+        raise ValueError("hier_schedule_layout needs a bucketed schedule")
+    base = hier.base
+    P, G, L = base.P, hier.G, hier.L
+    off_bg, R_bg = _segment_offsets(sched.slots_b, lead=sched.local_slot_b)
+    off_cg, R_cg = _segment_offsets(sched.slots_c, lead=sched.local_slot_c)
+    if sched.local_slot_b:
+        off_bg[0] = (0, sched.local_slot_b)
+    if sched.local_slot_c:
+        off_cg[0] = (0, sched.local_slot_c)
+    R_bg = max(R_bg, 1)
+    R_cg = max(R_cg, 1)
+
+    b_counts = (hier.b_group_send_idx >= 0).sum(axis=2)
+    b_send_idx = np.full((P, R_bg), -1, np.int32)
+    for q in range(P):
+        gs = q // L
+        for gd in range(G):
+            cnt = int(b_counts[q, gd])
+            if not cnt:
+                continue
+            off, slot = off_bg[(gd - gs) % G]
+            assert cnt <= slot
+            b_send_idx[q, off:off + cnt] = hier.b_group_send_idx[q, gd, :cnt]
+
+    c_counts = (hier.c_group_rows >= 0).sum(axis=2)
+    c_recv_rows = np.full((P, R_cg), -1, np.int32)
+    for dst in range(P):
+        gd = dst // L
+        for gs in range(G):
+            cnt = int(c_counts[gs, dst])
+            if not cnt:
+                continue
+            off, slot = off_cg[(gd - gs) % G]
+            assert cnt <= slot
+            c_recv_rows[dst, off:off + cnt] = hier.c_group_rows[gs, dst, :cnt]
+
+    pieces = hier_piece_csrs(hier)
+
+    # colp: hier gathered col ((ls·G + gs)·max_bg + slot) ->
+    #       ls·R_bg + off_bg[(gd_dest - gs) % G] + slot
+    goff = np.full(G, -1, np.int64)
+    for dg, (off, _) in off_bg.items():
+        goff[dg] = off
+    colp: List = []
+    for p in range(P):
+        gd = p // L
+        csr = pieces["colp"][p]
+        coo = csr.to_coo()
+        flat = coo.col.astype(np.int64)
+        lg = flat // hier.max_bg
+        slots = flat % hier.max_bg
+        ls, gs = lg // G, lg % G
+        new_cols = ls * R_bg + goff[(gd - gs) % G] + slots
+        assert csr.nnz == 0 or new_cols.min() >= 0
+        colp.append(csr_from_coo(COOMatrix(
+            (csr.shape[0], L * R_bg), coo.row,
+            new_cols.astype(np.int32), coo.val)))
+
+    # rowp: dest-major row (dst·max_cg + gslot) -> shift-major
+    #       ((dg·L + l_dst)·max_cg + gslot), dg = dest group shift from q
+    rowp: List = []
+    for q in range(P):
+        gs = q // L
+        csr = pieces["rowp"][q]
+        coo = csr.to_coo()
+        flat = coo.row.astype(np.int64)
+        dst = flat // hier.max_cg
+        gslot = flat % hier.max_cg
+        dg = (dst // L - gs) % G
+        new_rows = (dg * L + dst % L) * hier.max_cg + gslot
+        rowp.append(csr_from_coo(COOMatrix(
+            (csr.shape[0], csr.shape[1]), new_rows.astype(np.int32),
+            coo.col, coo.val)))
+
+    return HierScheduleLayout(
+        schedule=sched, off_bg=off_bg, off_cg=off_cg, R_bg=R_bg, R_cg=R_cg,
+        b_send_idx=b_send_idx, c_recv_rows=c_recv_rows,
+        colp=colp, rowp=rowp,
+    )

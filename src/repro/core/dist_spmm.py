@@ -2,8 +2,8 @@
 
 Two executors over a 1-D row-partitioned ``C = A @ B``:
 
-* ``flat_spmm``      — single-tier all_to_all schedule implementing the
-  planner's strategy ('block' / 'col' / 'row' / 'joint'): paper Fig. 1.
+* ``flat_spmm``      — single-tier schedule implementing the planner's
+  strategy ('block' / 'col' / 'row' / 'joint'): paper Fig. 1.
 * ``hier_spmm``      — two-tier (group, local) schedule implementing
   paper Alg. 1 / Fig. 6(f): inter-group B fetch ∥ intra-group C
   pre-aggregation, then inter-group C transfer ∥ intra-group B
@@ -14,23 +14,47 @@ All buffer shapes are static (padded by the offline planner), so both
 executors jit/lower cleanly — the same property the multi-pod dry-run
 relies on.
 
-Local compute is pluggable (core.local_backend): each exec plan carries
-the planner's sparse pieces prepared in one or more backend layouts
-(padded COO scatter-add, Pallas ELL/BSR blocks, ...), and the executors
-take ``backend="coo"|"bsr"`` per call. The communication schedule is
-backend-invariant — the collectives in the lowered HLO are identical
-whichever backend computes the local pieces.
+Communication schedules are pluggable (core.comm_schedule): the default
+``single`` schedule is the paper-style one max-padded ``all_to_all`` per
+part; a ``bucketed`` CommSchedule replaces it with statically-unrolled
+ppermute rounds whose slot sizes track per-shift demand, cutting the
+executed padded bytes toward the planner's analytic volume on skewed
+patterns. Pass ``schedule=`` to ``flat_exec_arrays`` /
+``hier_exec_arrays``; the executors read it from the plan's static
+metadata, so ``flat_spmm`` / ``hier_spmm`` calls are unchanged.
+
+Local compute is pluggable too (core.local_backend): each exec plan
+carries the planner's sparse pieces prepared in one or more backend
+layouts (padded COO scatter-add, Pallas ELL/BSR blocks, ...), and the
+executors take ``backend="coo"|"bsr"`` per call. Neither the backend nor
+the pack/aggregate kernels touch the communication schedule — the
+collectives in the lowered HLO are identical whichever backend computes
+the local pieces.
+
+The send-buffer pack and the received-partials aggregation go through
+``kernels.ops`` (``pack_rows_op`` / ``scatter_add_rows_exec_op``): the
+Pallas gather / sorted-scatter kernels on TPU (interpret mode when
+``REPRO_PALLAS_INTERPRET=1``), the pure-jnp oracles elsewhere — all
+numerically interchangeable.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..compat import all_to_all, psum_scatter, shard_map
+from ..compat import all_to_all, ppermute, psum_scatter, shard_map
+from ..kernels.ops import (
+    pack_rows_op, prepare_sorted_scatter, scatter_add_rows_exec_op,
+)
+from .comm_schedule import (
+    CommSchedule, flat_schedule_layout, hier_schedule_layout,
+    single_round_hier_schedule, single_round_schedule,
+)
 from .hierarchy import HierPlan, hier_piece_csrs
 from .local_backend import (
     LocalSpmmBackend, coo_spmm_local, get_backend,
@@ -53,6 +77,9 @@ BackendSpec = Union[str, LocalSpmmBackend]
 # [G, L, ...] (hier) axes so they shard over the mesh like any other leaf
 Pieces = Dict[str, Dict[str, jax.Array]]
 
+# static per-shift segment descriptors: ((shift, offset, slot), ...)
+Segments = Tuple[Tuple[int, int, int], ...]
+
 
 def _prepare_pieces(
     piece_csrs: Dict[str, list],
@@ -70,6 +97,22 @@ def _prepare_pieces(
     if not resolved:
         raise ValueError("at least one backend is required")
     return prepared, resolved
+
+
+def _stack_sorted_scatter(tgt_rows: np.ndarray
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-process sorted-scatter prep, stacked on the leading axis.
+
+    ``tgt_rows`` is [P, S] (-1 pads). Returns (perm [P, S] int32,
+    meta [P, S+1] int32) ready to ride into the shard_map body as device
+    args for ``scatter_add_rows_exec_op``.
+    """
+    perms, metas = [], []
+    for p in range(tgt_rows.shape[0]):
+        perm, meta = prepare_sorted_scatter(tgt_rows[p])
+        perms.append(perm)
+        metas.append(meta)
+    return np.stack(perms), np.stack(metas)
 
 
 class _ExecPlanBase:
@@ -98,6 +141,10 @@ class _ExecPlanBase:
     def backends(self) -> Tuple[str, ...]:
         return tuple(self.pieces)
 
+    @property
+    def schedule(self) -> CommSchedule:
+        return self.meta["schedule"]
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -106,11 +153,18 @@ class FlatExecPlan(_ExecPlanBase):
 
     ``pieces[backend][piece]`` holds the backend-native arrays for the
     three local-compute pieces ('diag', 'colp', 'rowp'), leading axis P.
+    ``b_send_idx`` / ``c_recv_rows`` follow the active schedule's layout:
+    [P, P, max_b] / [P, P, max_c] for the single all_to_all round,
+    [P, R_b] / [P, R_c] flat segment spaces for a bucketed schedule.
+    ``agg_perm`` / ``agg_meta`` are the host-prepared sorted-scatter maps
+    consumed by the Pallas aggregation kernel.
     """
 
     pieces: Dict[str, Pieces]
-    b_send_idx: jax.Array  # [P(src), P(dst), max_b] int32, -1 pad
-    c_recv_rows: jax.Array  # [P(dst), P(src), max_c] int32, -1 pad
+    b_send_idx: jax.Array  # int32, -1 pad
+    c_recv_rows: jax.Array  # int32, -1 pad
+    agg_perm: jax.Array  # [P, S] int32
+    agg_meta: jax.Array  # [P, S+1] int32
     meta: dict = dataclasses.field(metadata=dict(static=True), default_factory=dict)
 
     @property
@@ -132,12 +186,15 @@ class HierExecPlan(_ExecPlanBase):
     """Stacked per-process device arrays for the hierarchical executor.
 
     All leading [P, ...] arrays are reshaped to [G, L, ...] so they shard
-    over the ('g', 'l') mesh axes.
+    over the ('g', 'l') mesh axes. Layouts follow the active inter-group
+    schedule exactly as in ``FlatExecPlan``.
     """
 
     pieces: Dict[str, Pieces]
-    b_group_send_idx: jax.Array  # [G, L, G(dst), max_bg]
-    c_recv_rows: jax.Array  # [G(dst), L(dst), G(src), max_cg]
+    b_group_send_idx: jax.Array
+    c_recv_rows: jax.Array
+    agg_perm: jax.Array
+    agg_meta: jax.Array
     meta: dict = dataclasses.field(metadata=dict(static=True), default_factory=dict)
 
     @property
@@ -169,55 +226,174 @@ def _uniform_m_local(bounds) -> int:
     return int(next(iter(m_locals)))
 
 
+def _segments_static(off: Dict[int, Tuple[int, int]],
+                     skip_shift0: bool = True) -> Segments:
+    """Freeze a {shift: (offset, slot)} map into static metadata."""
+    items = [(d, o, s) for d, (o, s) in off.items()
+             if not (skip_shift0 and d == 0)]
+    return tuple(sorted(items, key=lambda t: t[1]))
+
+
 def flat_exec_arrays(plan: SpmmPlan,
-                     backends: Sequence[BackendSpec] = ("coo",)
+                     backends: Sequence[BackendSpec] = ("coo",),
+                     schedule: Optional[CommSchedule] = None
                      ) -> FlatExecPlan:
     """Convert an offline SpmmPlan into stacked device arrays.
 
     ``backends`` selects which local-compute layouts to prepare; the
     executor picks among them per call (``flat_spmm(..., backend=...)``).
+    ``schedule`` selects the communication realization: ``None`` (or a
+    ``kind="single"`` CommSchedule) keeps the one max-padded all_to_all
+    per part; a bucketed CommSchedule (core.comm_schedule.
+    build_comm_schedule) switches to per-shift ppermute rounds and
+    re-lays the colp/rowp pieces into the bucketed index spaces.
     """
     m_local = _uniform_m_local(plan.bounds)
-    pieces, resolved = _prepare_pieces(local_piece_csrs(plan), backends)
+    if schedule is None or schedule.kind == "single":
+        sched = schedule or single_round_schedule(plan)
+        pieces, resolved = _prepare_pieces(local_piece_csrs(plan), backends)
+        c_recv = plan.c_send_rows.transpose(1, 0, 2)  # [P(dst), P(src), max_c]
+        perm, meta_arr = _stack_sorted_scatter(
+            c_recv.reshape(plan.P, -1))
+        return FlatExecPlan(
+            pieces=pieces,
+            b_send_idx=jnp.asarray(plan.b_send_idx),
+            c_recv_rows=jnp.asarray(c_recv),
+            agg_perm=jnp.asarray(perm),
+            agg_meta=jnp.asarray(meta_arr),
+            meta=dict(P=plan.P, max_b=plan.max_b, max_c=plan.max_c,
+                      m_local=m_local, backends=resolved,
+                      default_backend=next(iter(resolved)),
+                      schedule=sched),
+        )
+
+    layout = flat_schedule_layout(plan, schedule)
+    piece_csrs = {"diag": list(plan.a_diag), "colp": layout.colp,
+                  "rowp": layout.rowp}
+    pieces, resolved = _prepare_pieces(piece_csrs, backends)
+    perm, meta_arr = _stack_sorted_scatter(layout.c_recv_rows)
     return FlatExecPlan(
         pieces=pieces,
-        b_send_idx=jnp.asarray(plan.b_send_idx),
-        c_recv_rows=jnp.asarray(plan.c_send_rows.transpose(1, 0, 2)),
+        b_send_idx=jnp.asarray(layout.b_send_idx),
+        c_recv_rows=jnp.asarray(layout.c_recv_rows),
+        agg_perm=jnp.asarray(perm),
+        agg_meta=jnp.asarray(meta_arr),
         meta=dict(P=plan.P, max_b=plan.max_b, max_c=plan.max_c,
                   m_local=m_local, backends=resolved,
-                  default_backend=next(iter(resolved))),
+                  default_backend=next(iter(resolved)),
+                  schedule=schedule,
+                  b_segments=_segments_static(layout.off_b),
+                  c_segments=_segments_static(layout.off_c),
+                  R_b=layout.R_b, R_c=layout.R_c),
     )
 
 
 def hier_exec_arrays(hier: HierPlan,
-                     backends: Sequence[BackendSpec] = ("coo",)
+                     backends: Sequence[BackendSpec] = ("coo",),
+                     schedule: Optional[CommSchedule] = None
                      ) -> HierExecPlan:
-    """Convert a HierPlan into stacked device arrays for the (g,l) mesh."""
+    """Convert a HierPlan into stacked device arrays for the (g,l) mesh.
+
+    ``schedule`` buckets the INTER-GROUP collectives (see
+    core.comm_schedule.build_hier_comm_schedule); the intra-group
+    psum_scatter / all_gather keep their uniform layouts either way.
+    """
     base = hier.base
     G, L = hier.G, hier.L
     m_local = _uniform_m_local(base.bounds)
-    pieces, resolved = _prepare_pieces(hier_piece_csrs(hier), backends)
-    # reshape every piece leaf [P, ...] -> [G, L, ...] for the (g,l) mesh
+
+    if schedule is None or schedule.kind == "single":
+        sched = schedule or single_round_hier_schedule(hier)
+        pieces, resolved = _prepare_pieces(hier_piece_csrs(hier), backends)
+        pieces = jax.tree_util.tree_map(
+            lambda x: x.reshape((G, L) + x.shape[1:]), pieces)
+        c_recv = hier.c_group_rows.transpose(1, 0, 2)  # [P(dst), G(src), max_cg]
+        perm, meta_arr = _stack_sorted_scatter(
+            c_recv.reshape(base.P, -1))
+        return HierExecPlan(
+            pieces=pieces,
+            b_group_send_idx=jnp.asarray(
+                hier.b_group_send_idx.reshape(G, L, G, hier.max_bg)),
+            c_recv_rows=jnp.asarray(
+                c_recv.reshape(G, L, G, hier.max_cg)),
+            agg_perm=jnp.asarray(perm.reshape(G, L, -1)),
+            agg_meta=jnp.asarray(meta_arr.reshape(G, L, -1)),
+            meta=dict(G=G, L=L, max_bg=hier.max_bg, max_cg=hier.max_cg,
+                      m_local=m_local, backends=resolved,
+                      default_backend=next(iter(resolved)),
+                      schedule=sched),
+        )
+
+    layout = hier_schedule_layout(hier, schedule)
+    piece_csrs = {"diag": list(base.a_diag), "colp": layout.colp,
+                  "rowp": layout.rowp}
+    pieces, resolved = _prepare_pieces(piece_csrs, backends)
     pieces = jax.tree_util.tree_map(
         lambda x: x.reshape((G, L) + x.shape[1:]), pieces)
-    c_recv = hier.c_group_rows.transpose(1, 0, 2).reshape(
-        G, L, hier.G, hier.max_cg)
+    perm, meta_arr = _stack_sorted_scatter(layout.c_recv_rows)
+    local_b = layout.off_bg.get(0)
+    local_c = layout.off_cg.get(0)
     return HierExecPlan(
         pieces=pieces,
         b_group_send_idx=jnp.asarray(
-            hier.b_group_send_idx.reshape(G, L, hier.G, hier.max_bg)),
-        c_recv_rows=jnp.asarray(c_recv),
+            layout.b_send_idx.reshape(G, L, layout.R_bg)),
+        c_recv_rows=jnp.asarray(
+            layout.c_recv_rows.reshape(G, L, layout.R_cg)),
+        agg_perm=jnp.asarray(perm.reshape(G, L, -1)),
+        agg_meta=jnp.asarray(meta_arr.reshape(G, L, -1)),
         meta=dict(G=G, L=L, max_bg=hier.max_bg, max_cg=hier.max_cg,
                   m_local=m_local, backends=resolved,
-                  default_backend=next(iter(resolved))),
+                  default_backend=next(iter(resolved)),
+                  schedule=schedule,
+                  bg_segments=_segments_static(layout.off_bg),
+                  cg_segments=_segments_static(layout.off_cg),
+                  local_b=local_b, local_c=local_c,
+                  R_bg=layout.R_bg, R_cg=layout.R_cg),
     )
 
 
-def _gather_send_rows(b_local: jax.Array, idx: jax.Array) -> jax.Array:
-    """Pack send buffer: rows b_local[idx] with -1 padding zeroed."""
-    safe = jnp.maximum(idx, 0)
-    rows = b_local[safe.reshape(-1)].reshape(idx.shape + (b_local.shape[1],))
-    return jnp.where((idx >= 0)[..., None], rows, 0.0)
+# ---------------------------------------------------------------------------
+# bucketed round execution (shared by both executors)
+# ---------------------------------------------------------------------------
+
+
+def _shift_perm(P_: int, d: int) -> List[Tuple[int, int]]:
+    return [(q, (q + d) % P_) for q in range(P_)]
+
+
+def _exchange_segments(segments: Segments, axis: str, P_: int, total: int,
+                       n: int, dtype, fetch,
+                       local: Optional[Tuple[int, int]] = None) -> jax.Array:
+    """Run one ppermute per segment and rebuild the flat receive space.
+
+    ``fetch(d, off, slot)`` produces the [slot, N] send buffer for shift
+    ``d`` (a static slice of the packed send space, or of the
+    pre-aggregated hier tiles). Segment (d, off, slot) comes back — from
+    src ``(me - d) % P`` — at the same offset, so send and receive share
+    one layout. ``local`` is the hier shift-0 (own group) segment:
+    fetched straight into the receive space, never touching the wire.
+    Degenerate empty schedules yield the all-padding [total, N] zeros.
+    """
+    parts: List[Tuple[int, jax.Array]] = []
+    if local is not None:
+        off, slot = local
+        parts.append((off, fetch(0, off, slot)))
+    for d, off, slot in segments:
+        parts.append((off, ppermute(fetch(d, off, slot), axis,
+                                    _shift_perm(P_, d))))
+    if not parts:
+        return jnp.zeros((total, n), dtype)
+    parts.sort(key=lambda t: t[0])
+    out = jnp.concatenate([seg for _, seg in parts], axis=0)
+    if out.shape[0] < total:  # trailing dummy slot (degenerate empty plan)
+        out = jnp.concatenate(
+            [out, jnp.zeros((total - out.shape[0], n), dtype)], axis=0)
+    return out
+
+
+def _slice_fetch(buf: jax.Array):
+    """fetch() over a packed send buffer sharing the receive layout."""
+    return lambda d, off, slot: jax.lax.slice_in_dim(buf, off, off + slot)
 
 
 # ---------------------------------------------------------------------------
@@ -232,46 +408,82 @@ def flat_spmm(plan: FlatExecPlan, b_global: jax.Array, mesh: Mesh,
 
     ``b_global``: [K, N] dense matrix, row-sharded over ``axis``.
     ``backend`` selects the local-compute substrate among the layouts the
-    plan was built with (default: the plan's first backend). Returns C
+    plan was built with (default: the plan's first backend). The
+    communication realization (single all_to_all round vs bucketed
+    ppermute rounds) was fixed at ``flat_exec_arrays`` time. Returns C
     [M, N] row-sharded the same way.
     """
     m_local = plan.meta["m_local"]
     P_ = plan.P
     be, pieces = plan.resolve_backend(backend)
+    sched = plan.schedule
 
-    def body(pieces, b_send_idx, c_recv_rows, b_loc):
-        pieces = jax.tree_util.tree_map(lambda x: x[0], pieces)
-        b_send_idx = b_send_idx[0]
-        c_recv_rows = c_recv_rows[0]
-        n = b_loc.shape[1]
+    if sched.kind == "single":
+        def body(pieces, b_send_idx, c_recv_rows, agg_perm, agg_meta, b_loc):
+            pieces = jax.tree_util.tree_map(lambda x: x[0], pieces)
+            b_send_idx = b_send_idx[0]
+            c_recv_rows = c_recv_rows[0]
+            agg_perm, agg_meta = agg_perm[0], agg_meta[0]
+            n = b_loc.shape[1]
 
-        # ① pack + exchange B rows (column-based communication, Fig. 1(b))
-        send_b = _gather_send_rows(b_loc, b_send_idx)  # [P, max_b, N]
-        recv_b = all_to_all(send_b, axis, 0, 0, tiled=False)
+            # ① pack + exchange B rows (column-based comm, Fig. 1(b))
+            send_b = pack_rows_op(b_loc, b_send_idx)  # [P, max_b, N]
+            recv_b = all_to_all(send_b, axis, 0, 0, tiled=False)
 
-        # ② remote computation (row-based, Fig. 1(c)): partial C rows for
-        #    every other process, computed against the LOCAL B block.
-        partials = be.compute(pieces["rowp"], b_loc,
-                              P_ * plan.max_c)  # [P*max_c, N]
-        send_c = partials.reshape(P_, plan.max_c, n)
-        recv_c = all_to_all(send_c, axis, 0, 0, tiled=False)
+            # ② remote computation (row-based, Fig. 1(c)): partial C rows
+            #    for every other process, against the LOCAL B block.
+            partials = be.compute(pieces["rowp"], b_loc,
+                                  P_ * plan.max_c)  # [P*max_c, N]
+            send_c = partials.reshape(P_, plan.max_c, n)
+            recv_c = all_to_all(send_c, axis, 0, 0, tiled=False)
 
-        # ③ local compute: diagonal block + column-covered remote nonzeros
-        c = be.compute(pieces["diag"], b_loc, m_local)
-        recv_b_flat = recv_b.reshape(P_ * plan.max_b, n)
-        c = c + be.compute(pieces["colp"], recv_b_flat, m_local)
+            # ③ local compute: diagonal + column-covered remote nonzeros
+            c = be.compute(pieces["diag"], b_loc, m_local)
+            recv_b_flat = recv_b.reshape(P_ * plan.max_b, n)
+            c = c + be.compute(pieces["colp"], recv_b_flat, m_local)
 
-        # ④ result aggregation: scatter received partial C rows
-        tgt = c_recv_rows.reshape(-1)  # [P*max_c]
-        vals = recv_c.reshape(P_ * plan.max_c, n)
-        vals = jnp.where((tgt >= 0)[:, None], vals, 0.0)
-        c = c.at[jnp.maximum(tgt, 0)].add(vals)
-        return c
+            # ④ result aggregation: scatter received partial C rows
+            return scatter_add_rows_exec_op(
+                c, recv_c.reshape(P_ * plan.max_c, n),
+                c_recv_rows.reshape(-1), agg_perm, agg_meta)
+    else:
+        b_segments: Segments = plan.meta["b_segments"]
+        c_segments: Segments = plan.meta["c_segments"]
+        R_b, R_c = plan.meta["R_b"], plan.meta["R_c"]
+
+        def body(pieces, b_send_idx, c_recv_rows, agg_perm, agg_meta, b_loc):
+            pieces = jax.tree_util.tree_map(lambda x: x[0], pieces)
+            b_send_idx = b_send_idx[0]
+            c_recv_rows = c_recv_rows[0]
+            agg_perm, agg_meta = agg_perm[0], agg_meta[0]
+
+            n = b_loc.shape[1]
+
+            # ① pack once, then one ppermute per scheduled shift — each
+            #   padded only to its round's slot ceiling
+            send_b = pack_rows_op(b_loc, b_send_idx)  # [R_b, N]
+            recv_b = _exchange_segments(b_segments, axis, P_, R_b, n,
+                                        b_loc.dtype, _slice_fetch(send_b))
+
+            # ② partial C rows, computed straight into the bucketed
+            #   send space, then exchanged shift by shift
+            partials = be.compute(pieces["rowp"], b_loc, R_c)  # [R_c, N]
+            recv_c = _exchange_segments(c_segments, axis, P_, R_c, n,
+                                        b_loc.dtype, _slice_fetch(partials))
+
+            # ③ local compute against the bucketed receive space
+            c = be.compute(pieces["diag"], b_loc, m_local)
+            c = c + be.compute(pieces["colp"], recv_b, m_local)
+
+            # ④ aggregation of received partials
+            return scatter_add_rows_exec_op(
+                c, recv_c, c_recv_rows, agg_perm, agg_meta)
 
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(P(axis), P(axis), P(axis), P(axis)),
+                   in_specs=(P(axis),) * 6,
                    out_specs=P(axis))
-    return fn(pieces, plan.b_send_idx, plan.c_recv_rows, b_global)
+    return fn(pieces, plan.b_send_idx, plan.c_recv_rows,
+              plan.agg_perm, plan.agg_meta, b_global)
 
 
 # ---------------------------------------------------------------------------
@@ -287,60 +499,117 @@ def hier_spmm(plan: HierExecPlan, b_global: jax.Array, mesh: Mesh,
     Program order follows paper Alg. 1; the two stages use disjoint axes
     (inter ↔ ``group_axis``, intra ↔ ``local_axis``) so the compiler can
     overlap them (Fig. 6(f)). ``backend`` selects the local-compute
-    substrate exactly as in ``flat_spmm``.
+    substrate exactly as in ``flat_spmm``; a bucketed schedule (fixed at
+    ``hier_exec_arrays`` time) replaces the two inter-group all_to_alls
+    with per-group-shift ppermute rounds and serves own-group traffic
+    with a local slice.
     """
     m_local = plan.meta["m_local"]
     G, L = plan.G, plan.L
     max_bg, max_cg = plan.max_bg, plan.max_cg
     be, pieces = plan.resolve_backend(backend)
+    sched = plan.schedule
 
-    def body(pieces, b_group_send_idx, c_recv_rows, b_loc):
-        pieces = jax.tree_util.tree_map(lambda x: x[0, 0], pieces)
-        b_group_send_idx = b_group_send_idx[0, 0]
-        c_recv_rows = c_recv_rows[0, 0]
-        n = b_loc.shape[1]
+    if sched.kind == "single":
+        def body(pieces, b_group_send_idx, c_recv_rows, agg_perm, agg_meta,
+                 b_loc):
+            pieces = jax.tree_util.tree_map(lambda x: x[0, 0], pieces)
+            b_group_send_idx = b_group_send_idx[0, 0]
+            c_recv_rows = c_recv_rows[0, 0]
+            agg_perm, agg_meta = agg_perm[0, 0], agg_meta[0, 0]
+            n = b_loc.shape[1]
 
-        # Stage I.① (inter-group, column-based): ship de-duplicated B rows
-        # once per destination group. Pairs (g, l) <-> (g', l).
-        send_bg = _gather_send_rows(b_loc, b_group_send_idx)  # [G, max_bg, N]
-        recv_bg = all_to_all(send_bg, group_axis, 0, 0, tiled=False)
+            # Stage I.① (inter-group, column-based): ship de-duplicated B
+            # rows once per destination group. Pairs (g, l) <-> (g', l).
+            send_bg = pack_rows_op(b_loc, b_group_send_idx)  # [G, max_bg, N]
+            recv_bg = all_to_all(send_bg, group_axis, 0, 0, tiled=False)
 
-        # Stage I.① (intra-group, row-based): compute partials and
-        # pre-aggregate within the source group via reduce-scatter; each
-        # member ends up owning the aggregates for destinations that share
-        # its local rank (the "representative" of paper Fig. 6(e)).
-        partials = be.compute(pieces["rowp"], b_loc,
-                              G * L * max_cg)  # [(gd,ld,slot), N]
-        partials = partials.reshape(G, L * max_cg, n)
-        agg = psum_scatter(partials, local_axis,
-                           scatter_dimension=1, tiled=True)
-        # agg: [G(dst), max_cg, N] — aggregated partials for dests with my l.
+            # Stage I.① (intra-group, row-based): compute partials and
+            # pre-aggregate within the source group via reduce-scatter;
+            # each member ends up owning the aggregates for destinations
+            # that share its local rank (the "representative" of Fig. 6(e)).
+            partials = be.compute(pieces["rowp"], b_loc,
+                                  G * L * max_cg)  # [(gd,ld,slot), N]
+            partials = partials.reshape(G, L * max_cg, n)
+            agg = psum_scatter(partials, local_axis,
+                               scatter_dimension=1, tiled=True)
+            # agg: [G(dst), max_cg, N] — aggregated partials for dests
+            # sharing my local rank.
 
-        # Stage II.② (inter-group, row-based): aggregated C rows cross the
-        # slow tier once per source group.
-        recv_cg = all_to_all(agg, group_axis, 0, 0, tiled=False)
-        # recv_cg: [G(src), max_cg, N] for THIS process as destination.
+            # Stage II.② (inter-group, row-based): aggregated C rows cross
+            # the slow tier once per source group.
+            recv_cg = all_to_all(agg, group_axis, 0, 0, tiled=False)
 
-        # Stage II.② (intra-group, column-based): distribute fetched B rows
-        # inside the destination group.
-        all_bg = jax.lax.all_gather(recv_bg, local_axis, axis=0, tiled=False)
-        # all_bg: [L(src), G(src), max_bg, N] — the group's fetched rows.
+            # Stage II.② (intra-group, column-based): distribute fetched B
+            # rows inside the destination group.
+            all_bg = jax.lax.all_gather(recv_bg, local_axis, axis=0,
+                                        tiled=False)
+            # all_bg: [L(src), G(src), max_bg, N]
 
-        # local compute
-        c = be.compute(pieces["diag"], b_loc, m_local)
-        bg_flat = all_bg.reshape(L * G * max_bg, n)
-        c = c + be.compute(pieces["colp"], bg_flat, m_local)
+            # local compute
+            c = be.compute(pieces["diag"], b_loc, m_local)
+            bg_flat = all_bg.reshape(L * G * max_bg, n)
+            c = c + be.compute(pieces["colp"], bg_flat, m_local)
 
-        # result aggregation of row-based partials
-        tgt = c_recv_rows.reshape(-1)  # [G*max_cg]
-        vals = recv_cg.reshape(G * max_cg, n)
-        vals = jnp.where((tgt >= 0)[:, None], vals, 0.0)
-        c = c.at[jnp.maximum(tgt, 0)].add(vals)
-        return c[None]
+            # result aggregation of row-based partials
+            c = scatter_add_rows_exec_op(
+                c, recv_cg.reshape(G * max_cg, n),
+                c_recv_rows.reshape(-1), agg_perm, agg_meta)
+            return c[None]
+    else:
+        bg_segments: Segments = plan.meta["bg_segments"]
+        cg_segments: Segments = plan.meta["cg_segments"]
+        local_b = plan.meta["local_b"]
+        local_c = plan.meta["local_c"]
+        R_bg, R_cg = plan.meta["R_bg"], plan.meta["R_cg"]
+
+        def body(pieces, b_group_send_idx, c_recv_rows, agg_perm, agg_meta,
+                 b_loc):
+            pieces = jax.tree_util.tree_map(lambda x: x[0, 0], pieces)
+            b_send_flat = b_group_send_idx[0, 0]
+            c_recv_flat = c_recv_rows[0, 0]
+            agg_perm, agg_meta = agg_perm[0, 0], agg_meta[0, 0]
+            n = b_loc.shape[1]
+
+            # Stage I.① inter-group B fetch, one ppermute per group shift;
+            # shift 0 (own group) is a wire-free local slice
+            send_bg = pack_rows_op(b_loc, b_send_flat)  # [R_bg, N]
+            recv_bg = _exchange_segments(bg_segments, group_axis, G, R_bg,
+                                         n, b_loc.dtype,
+                                         _slice_fetch(send_bg),
+                                         local=local_b)
+
+            # Stage I.① intra-group pre-aggregation (unchanged): rowp rows
+            # are laid out shift-major — (dg·L + ld)·max_cg + slot — so
+            # the aggregated tile for group shift dg sits at agg[dg]
+            partials = be.compute(pieces["rowp"], b_loc, G * L * max_cg)
+            partials = partials.reshape(G, L * max_cg, n)
+            agg = psum_scatter(partials, local_axis,
+                               scatter_dimension=1, tiled=True)
+            # agg: [G(shift), max_cg, N]
+
+            # Stage II.② inter-group C transfer, bucketed per shift: the
+            # send buffer for shift dg is the pre-aggregated tile agg[dg]
+            recv_cg = _exchange_segments(
+                cg_segments, group_axis, G, R_cg, n, b_loc.dtype,
+                lambda dg, off, slot: jax.lax.slice_in_dim(agg[dg], 0, slot),
+                local=local_c)
+
+            # Stage II.② intra-group B distribution
+            all_bg = jax.lax.all_gather(recv_bg, local_axis, axis=0,
+                                        tiled=False)  # [L, R_bg, N]
+
+            c = be.compute(pieces["diag"], b_loc, m_local)
+            c = c + be.compute(pieces["colp"], all_bg.reshape(L * R_bg, n),
+                               m_local)
+            c = scatter_add_rows_exec_op(
+                c, recv_cg, c_recv_flat, agg_perm, agg_meta)
+            return c[None]
 
     gl = P(group_axis, local_axis)
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(gl, gl, gl, P((group_axis, local_axis))),
+                   in_specs=(gl,) * 5 + (P((group_axis, local_axis)),),
                    out_specs=gl)
-    out = fn(pieces, plan.b_group_send_idx, plan.c_recv_rows, b_global)
+    out = fn(pieces, plan.b_group_send_idx, plan.c_recv_rows,
+             plan.agg_perm, plan.agg_meta, b_global)
     return out.reshape(-1, b_global.shape[1])

@@ -183,10 +183,22 @@ class SpmmPlan:
         """Total communicated rows under this plan (ideal, unpadded)."""
         return sum(pp.mu for pp in self.pair_plans.values())
 
-    def volume_rows_padded(self) -> int:
-        """Rows actually moved through the padded static buffers."""
-        off_pairs = self.P * (self.P - 1)
-        return off_pairs * (self.max_b + self.max_c)
+    def volume_rows_padded(self, schedule=None) -> int:
+        """Rows placed in collective operands by the ACTIVE schedule.
+
+        ``schedule``: a ``core.comm_schedule.CommSchedule`` (bucketed or
+        single); ``None`` means the default single max-padded all_to_all
+        round. The count matches what HLO analysis measures on the
+        lowered program — for the single round that is ``P² (max_b +
+        max_c)`` rows: the dense all_to_all operand carries P slots per
+        process *including the always-empty self slot*, which is exactly
+        the padding waste the bucketed schedules eliminate.
+        """
+        from .comm_schedule import single_round_schedule
+
+        if schedule is None:
+            schedule = single_round_schedule(self)
+        return schedule.volume_rows_padded()
 
     def pair_matrix(self) -> np.ndarray:
         """[P,P] rows moved src->dst (for Fig. 9-style balance analysis)."""

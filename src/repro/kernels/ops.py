@@ -25,6 +25,8 @@ __all__ = [
     "bsr_spmm_op",
     "gather_rows_op",
     "scatter_add_rows_op",
+    "pack_rows_op",
+    "scatter_add_rows_exec_op",
     "prepare_sorted_scatter",
 ]
 
@@ -68,3 +70,35 @@ def scatter_add_rows_op(c: jax.Array, partials: jax.Array, tgt: np.ndarray) -> j
         c, partials[jnp.asarray(perm)], jnp.asarray(meta),
         interpret=(be == "interpret"),
     )
+
+
+def pack_rows_op(b: jax.Array, idx: jax.Array) -> jax.Array:
+    """Executor-side comm-buffer pack: ``out[..., s, :] = b[idx[..., s]]``.
+
+    ``idx`` may carry leading layout axes (e.g. [P, max_b] in the
+    single-round schedule); the Pallas gather kernel runs on the
+    flattened slot axis and the result is reshaped back. Slots with
+    ``idx < 0`` (plan padding) come back zeroed.
+    """
+    flat = idx.reshape(-1)
+    out = gather_rows_op(b, flat)
+    return out.reshape(idx.shape + (b.shape[1],))
+
+
+def scatter_add_rows_exec_op(c: jax.Array, partials: jax.Array,
+                             tgt: jax.Array, perm: jax.Array,
+                             meta: jax.Array) -> jax.Array:
+    """Executor-side result aggregation: ``c[tgt[s]] += partials[s]``.
+
+    Unlike ``scatter_add_rows_op`` the sorted-scatter preparation has
+    already happened host-side (once per plan, see
+    ``prepare_sorted_scatter``) and ``perm`` / ``meta`` arrive as device
+    arrays — required inside shard_map bodies where every process owns a
+    different target map. ``tgt`` is only consulted by the jnp oracle
+    path; the Pallas path consumes the pre-sorted ``perm`` / ``meta``.
+    """
+    be = kernel_backend()
+    if be == "ref":
+        return _ref.scatter_add_rows_ref(c, partials, tgt)
+    return scatter_add_rows_sorted_pallas(
+        c, partials[perm], meta, interpret=(be == "interpret"))

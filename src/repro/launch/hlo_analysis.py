@@ -19,7 +19,7 @@ import re
 from typing import Dict, Optional
 
 __all__ = ["DTYPE_BYTES", "parse_shape_bytes", "collective_bytes",
-           "roofline", "HW"]
+           "collective_rows", "roofline", "HW"]
 
 HW = {
     "peak_flops": 197e12,  # bf16 FLOP/s per chip
@@ -98,6 +98,19 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
         out[key] = out.get(key, 0) + b
     out["total"] = sum(v for k, v in out.items() if k != "total")
     return out
+
+
+def collective_rows(coll: Dict[str, int], n_dense: int,
+                    sz_dt: int = 4) -> float:
+    """Convert measured per-device collective bytes into buffer rows.
+
+    The SHIRO executors only move [rows, n_dense] float payloads through
+    their collectives, so ``total / (n_dense · sz)`` is the per-device
+    padded row count — directly comparable to
+    ``SpmmPlan.volume_rows_padded(schedule) / P`` when verifying that a
+    schedule's executed bytes match the planner's accounting.
+    """
+    return coll.get("total", 0) / float(n_dense * sz_dt)
 
 
 def roofline(cost: dict, coll: Dict[str, int], *, chips: int,

@@ -18,3 +18,20 @@ import pytest  # noqa: E402
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def power_law_matrix():
+    """Factory for skewed test matrices (power-law degrees on BOTH sides).
+
+    The high-imbalance regime the bucketed communication schedules
+    target: a handful of (src, dst) pairs carry most of the rows, so
+    max-padding every pair to the global slot maximum wastes an order of
+    magnitude on the wire (cf. benchmarks fig9_balance).
+    """
+    from repro.core.sparse import power_law_sparse
+
+    def make(m=64, k=64, nnz=400, alpha=1.2, seed=2):
+        return power_law_sparse(m, k, nnz, alpha, seed)
+
+    return make
