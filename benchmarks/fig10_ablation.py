@@ -1,25 +1,33 @@
 """Paper Fig. 10: step-wise optimization ablation — MEASURED wall time.
 
 Runs the actual shard_map executors on 8 host devices (the CPU-container
-stand-in for 32 GPUs): column-based baseline -> +joint row-column ->
-+hierarchical. Times are real end-to-end SpMM executions (jit, warmed).
+stand-in for 32 GPUs) through the front-door handle (``compile_spmm``):
+column-based baseline -> +joint row-column -> +bucketed schedule ->
++hierarchical (with and without the bucketed inter-group schedule).
+Times are real end-to-end SpMM executions (jit, warmed). Every row
+records the handle's autotune decisions (strategy / schedule K /
+backend) so ``run.py --json`` ships them in the BENCH records.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dist_spmm import (
-    flat_exec_arrays, flat_spmm, hier_exec_arrays, hier_spmm,
-)
-from repro.core.hierarchy import build_hier_plan
-from repro.core.planner import build_plan
-from repro.launch.mesh import make_spmm_mesh
+from repro.core import SpmmConfig, compile_spmm
 
 from .common import DATASETS, fmt_row, time_call
 
 P = 8
 N_DENSE = 64
+
+# the ablation axes: cover strategy, schedule on/off, executor tier
+STEPS = (
+    ("col", SpmmConfig(strategy="col", schedule="single")),
+    ("joint", SpmmConfig(schedule="single")),
+    ("joint+sched", SpmmConfig(schedule="auto")),
+    ("joint+hier", SpmmConfig(hier=(2, 4), schedule="single")),
+    ("joint+hier+sched", SpmmConfig(hier=(2, 4), schedule="auto")),
+)
 
 
 def run() -> list:
@@ -28,30 +36,23 @@ def run() -> list:
     for ds in ("social-pl", "mawi-hub", "uniform"):
         a = DATASETS[ds](0)
         b = jnp.asarray(rng.standard_normal((a.shape[1], N_DENSE)), jnp.float32)
-        ref = None
+        ref = a.to_dense() @ np.asarray(b)
         results = {}
-        for label, strat, hier_g in (("col", "col", None),
-                                     ("joint", "joint", None),
-                                     ("joint+hier", "joint", 2)):
-            plan = build_plan(a, P, strat)
-            if hier_g:
-                hp = build_hier_plan(plan, hier_g, P // hier_g)
-                ex = hier_exec_arrays(hp)
-                mesh = make_spmm_mesh(P, groups=hier_g)
-                fn = lambda bb: hier_spmm(ex, bb, mesh)
-            else:
-                ex = flat_exec_arrays(plan)
-                mesh = make_spmm_mesh(P)
-                fn = lambda bb: flat_spmm(ex, bb, mesh)
-            out = np.asarray(fn(b))
-            if ref is None:
-                ref = a.to_dense() @ np.asarray(b)
+        for label, cfg in STEPS:
+            handle = compile_spmm(a, P, cfg)
+            out = np.asarray(handle(b))
             np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
-            us = time_call(fn, b, warmup=2, iters=5)
+            us = time_call(handle, b, warmup=2, iters=5)
             results[label] = us
-            rows.append(fmt_row(f"fig10/{ds}/{label}", us,
-                                f"vol_rows={plan.volume_rows()}"))
-        sp = results["col"] / max(results["joint+hier"], 1e-9)
+            st = handle.stats()
+            rows.append(fmt_row(
+                f"fig10/{ds}/{label}", us,
+                f"vol_rows={st['volume_rows']};"
+                f"padded_rows={st['volume_rows_padded']};"
+                f"strategy={st['strategy']};"
+                f"schedule={st['schedule_kind']};K={st['schedule_K']};"
+                f"backend={st['default_backend']}"))
+        sp = results["col"] / max(results["joint+hier+sched"], 1e-9)
         rows.append(fmt_row(f"fig10/{ds}/speedup", 0.0,
                             f"col_over_shiro={sp:.2f}x"))
     return rows

@@ -14,7 +14,9 @@ import jax.numpy as jnp
 from repro.configs import get_config, get_smoke_config
 from repro.distributed.context import DistContext
 from repro.launch.mesh import make_mesh
-from repro.models.moe import init_moe_params, moe_comm_rows, moe_layer
+from repro.models.moe import (
+    compile_dispatch, init_moe_params, moe_comm_rows, moe_layer,
+)
 
 from .common import fmt_row, time_call
 
@@ -45,4 +47,18 @@ def run() -> list:
         rows.append(fmt_row(
             f"moe/ep-layer/{'shiro' if shiro else 'classic'}", us,
             f"experts={c.n_experts};top_k={c.top_k}"))
+
+    # (c) the dispatch exchange through the front-door handle: MWVC on
+    # the routing snapshot + autotuned schedule, decisions in the record
+    handle = compile_dispatch(cfg, tokens=512, M=4)
+    xb = jnp.asarray(jax.random.normal(jax.random.PRNGKey(2),
+                                       (512, cfg.d_model)), jnp.float32)
+    us = time_call(handle, xb, warmup=2, iters=5)
+    st = handle.stats()
+    rows.append(fmt_row(
+        "moe/dispatch-handle", us,
+        f"vol_rows={st['volume_rows']};"
+        f"padded_rows={st['volume_rows_padded']};"
+        f"strategy={st['strategy']};schedule={st['schedule_kind']};"
+        f"K={st['schedule_K']};backend={st['default_backend']}"))
     return rows

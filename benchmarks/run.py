@@ -23,6 +23,11 @@ Flags:
                   every CSV row becomes {"bench", "us_per_call", fields
                   parsed from the key=value derived string} — the format
                   CI diffs across PRs to catch schedule regressions.
+                  Handle-driven benchmarks (fig10_ablation, fig11_ncols,
+                  moe_dispatch) put the compile_spmm autotune decisions
+                  (strategy, schedule kind, K, backend) in the derived
+                  string, so every BENCH record carries what the front
+                  door decided for that matrix.
 """
 import argparse
 import json

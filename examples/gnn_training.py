@@ -17,9 +17,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_plan, flat_exec_arrays, flat_spmm, power_law_sparse
-from repro.launch.mesh import make_spmm_mesh
-from repro.models.gnn import GCN, gcn_forward, gcn_loss, normalize_adjacency
+from repro.core import SpmmConfig, build_plan, compile_spmm, power_law_sparse
+from repro.models.gnn import (
+    GCN, gcn_forward, gcn_loss, make_spmm_fn, normalize_adjacency,
+)
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 
 
@@ -36,16 +37,16 @@ def main() -> None:
         power_law_sparse(args.nodes, args.nodes, args.edges, 1.4, 0))
 
     t0 = time.perf_counter()
-    plan = build_plan(adj, args.procs, "joint")
+    handle = compile_spmm(adj, args.procs, SpmmConfig(schedule="auto"))
     prep_s = time.perf_counter() - t0
+    st = handle.stats()
     vols_col = build_plan(adj, args.procs, "col").volume_rows()
-    print(f"MWVC preprocessing: {prep_s:.2f}s; volume rows "
-          f"{vols_col} (col) -> {plan.volume_rows()} (joint, "
-          f"-{100 * (1 - plan.volume_rows() / max(vols_col, 1)):.1f}%)")
+    print(f"MWVC preprocessing + autotune: {prep_s:.2f}s; volume rows "
+          f"{vols_col} (col) -> {st['volume_rows']} (joint, "
+          f"-{100 * (1 - st['volume_rows'] / max(vols_col, 1)):.1f}%); "
+          f"schedule={st['schedule_kind']}/K={st['schedule_K']}")
 
-    ex = flat_exec_arrays(plan)
-    mesh = make_spmm_mesh(args.procs)
-    spmm = lambda h: flat_spmm(ex, h, mesh)
+    spmm = make_spmm_fn(handle)
 
     gcn = GCN(args.nodes, 64, 128, 16)
     params = gcn.init(jax.random.PRNGKey(0))

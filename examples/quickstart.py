@@ -1,23 +1,23 @@
-"""Quickstart: SHIRO distributed SpMM in ~40 lines.
+"""Quickstart: the SHIRO front door in ~30 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a power-law sparse matrix, plans communication with every strategy
-(paper Fig. 1), executes the joint plan distributed over 8 host devices,
-and verifies against the dense product.
+``repro.compile_spmm`` (alias ``shiro.compile``) is the one call that
+plans communication (exact MWVC covers, paper Eq. 9), autotunes the
+realization (flat vs hierarchical executor, single vs bucketed schedule,
+local backend layouts) and returns a prepared ``DistSpmm`` handle —
+``handle(b)`` then reuses a cached executable per call shape. The
+low-level layer it composes (``build_plan`` → ``flat_exec_arrays`` →
+``flat_spmm``) stays available for custom plumbing.
 """
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    build_hier_plan, build_plan, flat_exec_arrays, flat_spmm,
-    hier_exec_arrays, hier_spmm, power_law_sparse, strategy_volumes,
-)
-from repro.launch.mesh import make_spmm_mesh
+from repro.core import SpmmConfig, compile_spmm, strategy_volumes
+from repro.core.sparse import hub_sparse, power_law_sparse
 
 
 def main() -> None:
@@ -32,24 +32,42 @@ def main() -> None:
     print(f"  joint reduction vs best single: "
           f"{100 * (1 - vols['joint'] / min(vols['col'], vols['row'])):.1f}%")
 
-    # flat joint execution (paper §5)
-    plan = build_plan(a, P, "joint")
-    out = flat_spmm(flat_exec_arrays(plan), jnp.asarray(b), make_spmm_mesh(P))
+    # one front door: plan + autotune + prepare, then just call it
+    handle = compile_spmm(a, P, SpmmConfig(backends=("coo", "bsr"),
+                                           schedule="auto"))
+    out = handle(b)
     np.testing.assert_allclose(np.asarray(out), a.to_dense() @ b,
                                rtol=2e-3, atol=2e-3)
-    print("flat joint SpMM == dense reference  ✓")
+    st = handle.stats()
+    print(f"\n{handle}")
+    print(f"autotuned: schedule={st['schedule_kind']}/K={st['schedule_K']}, "
+          f"padded rows {st['volume_rows_padded_single']} -> "
+          f"{st['volume_rows_padded']} (analytic {st['volume_rows']})")
+    print("flat SpMM == dense reference  ✓")
+    handle(b)  # same shape: served from the executable cache
+    print(f"executable cache: {handle.cache_info()['lowerings']} lowering(s),"
+          f" {handle.cache_info()['hits']} hit(s)")
 
-    # hierarchical execution (paper §6): 2 groups ("pods") x 4 locals
-    hier = build_hier_plan(plan, G=2, L=4)
-    out2 = hier_spmm(hier_exec_arrays(hier), jnp.asarray(b),
-                     make_spmm_mesh(P, groups=2))
-    np.testing.assert_allclose(np.asarray(out2), a.to_dense() @ b,
+    # hub-structured traffic + a two-tier network -> the autotuner picks
+    # the hierarchical executor (paper §6) by the α-β model
+    ah = hub_sparse(512, 512, 4, 4, 0.35, seed=1)
+    hh = compile_spmm(ah, P, SpmmConfig(hier="auto", schedule="auto"))
+    out2 = hh(b)
+    np.testing.assert_allclose(np.asarray(out2), ah.to_dense() @ b,
                                rtol=2e-3, atol=2e-3)
-    b_h, c_h = hier.inter_group_rows()
-    b_f, c_f = hier.inter_group_rows_flat()
-    print(f"hierarchical SpMM == dense reference  ✓")
-    print(f"inter-group rows: flat {b_f + c_f} -> hierarchical {b_h + c_h} "
-          f"({100 * (1 - (b_h + c_h) / max(b_f + c_f, 1)):.1f}% reduction)")
+    sh = hh.stats()
+    print(f"\n{hh}")
+    print(f"hub pattern: chose the {sh['strategy']} executor "
+          f"(modeled flat {sh['modeled_time_flat'] * 1e6:.1f}us vs "
+          f"hier {sh['modeled_time_hier'] * 1e6:.1f}us)")
+    print("hierarchical SpMM == dense reference  ✓")
+
+    # ship the preprocessed plan: serving fleets load it without MWVC
+    hh.save("/tmp/shiro_quickstart.plan")
+    from repro.core import DistSpmm
+    loaded = DistSpmm.load("/tmp/shiro_quickstart.plan", P)
+    assert np.array_equal(np.asarray(loaded(b)), np.asarray(out2))
+    print("save -> load -> bit-identical C  ✓")
 
 
 if __name__ == "__main__":

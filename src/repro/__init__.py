@@ -1,0 +1,23 @@
+"""Top-level convenience exports: the SHIRO front-door API.
+
+    import repro
+    handle = repro.compile_spmm(a, mesh, repro.SpmmConfig(hier="auto"))
+
+Resolution is lazy (PEP 562) so ``import repro`` never touches jax;
+scripts keep setting ``XLA_FLAGS`` before the first real import. The
+paper-branded alias lives in the sibling ``shiro`` package
+(``shiro.compile``). Everything else stays addressed by subpackage
+(``repro.core``, ``repro.models``, ...).
+"""
+__all__ = ["SpmmConfig", "DistSpmm", "compile_spmm"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        from .core import api
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,12 +1,15 @@
 """SHIRO core: sparsity-aware + hierarchical communication for distributed SpMM.
 
 Public API:
+  front door         — compile_spmm / SpmmConfig / DistSpmm (autotuned,
+                       cacheable, serializable handle; also `shiro.compile`)
   sparse containers  — CSRMatrix, COOMatrix, BSRMatrix + generators
   exact covers       — min_vertex_cover_{unweighted,weighted} (König / Dinic)
   offline planning   — build_plan / build_hier_plan (paper §5-§6 preprocessing)
   comm schedules     — build_comm_schedule / choose_schedule (skew-aware
                        bucketed ppermute rounds vs the single padded a2a)
-  execution          — flat_spmm / hier_spmm (shard_map, jit/lower-clean)
+  execution          — flat_spmm / hier_spmm (shard_map, jit/lower-clean),
+                       the low-level layer the front door composes
   analytics          — strategy_volumes, modeled_time, balance_stats
 """
 from .sparse import (
@@ -31,14 +34,19 @@ from .comm_model import (
     NetworkSpec, TSUBAME_LIKE, TPU_POD, AURORA_LIKE,
     strategy_volumes, modeled_time, modeled_time_hier, balance_stats,
     modeled_time_schedule, choose_schedule,
+    modeled_time_hier_schedule, choose_hier_schedule,
 )
 from .comm_schedule import (
     CommRound, CommSchedule, build_comm_schedule, build_hier_comm_schedule,
     single_round_schedule, single_round_hier_schedule,
 )
 from .dist_spmm import (
-    FlatExecPlan, HierExecPlan, flat_exec_arrays, hier_exec_arrays,
-    flat_spmm, hier_spmm, coo_spmm_local,
+    BackendSpec, FlatExecPlan, HierExecPlan, flat_exec_arrays,
+    hier_exec_arrays, flat_spmm, hier_spmm, coo_spmm_local,
+)
+from .api import (
+    SpmmConfig, DistSpmm, compile_spmm, make_spmm_fn,
+    register_lowering_hook, unregister_lowering_hook,
 )
 
 __all__ = [
@@ -55,9 +63,12 @@ __all__ = [
     "NetworkSpec", "TSUBAME_LIKE", "TPU_POD", "AURORA_LIKE",
     "strategy_volumes", "modeled_time", "modeled_time_hier", "balance_stats",
     "modeled_time_schedule", "choose_schedule",
+    "modeled_time_hier_schedule", "choose_hier_schedule",
     "CommRound", "CommSchedule", "build_comm_schedule",
     "build_hier_comm_schedule", "single_round_schedule",
     "single_round_hier_schedule",
-    "FlatExecPlan", "HierExecPlan", "flat_exec_arrays", "hier_exec_arrays",
-    "flat_spmm", "hier_spmm", "coo_spmm_local",
+    "BackendSpec", "FlatExecPlan", "HierExecPlan", "flat_exec_arrays",
+    "hier_exec_arrays", "flat_spmm", "hier_spmm", "coo_spmm_local",
+    "SpmmConfig", "DistSpmm", "compile_spmm", "make_spmm_fn",
+    "register_lowering_hook", "unregister_lowering_hook",
 ]

@@ -1,0 +1,523 @@
+"""One front door: ``compile_spmm`` — an autotuned, cacheable DistSpmm handle.
+
+SHIRO's pitch is that the *framework* picks the near-optimal communication
+strategy. The low-level surface (``build_plan`` → ``build_hier_plan`` →
+``flat_exec_arrays``/``hier_exec_arrays`` → ``flat_spmm``/``hier_spmm``)
+exposes every knob but makes the caller assemble the pipeline by hand — and
+in practice nobody turns the knobs. This module owns the whole pipeline
+behind a single prepared handle:
+
+    cfg = SpmmConfig(backends=("coo", "bsr"), hier="auto", schedule="auto")
+    h   = compile_spmm(a, mesh, cfg)      # plan + autotune + prepare, once
+    c   = h(b)                            # cached AOT executable per shape
+    h.stats()                             # what it decided, and why
+    h.save("plan.shiro")                  # ship the preprocessed plan
+    h2  = DistSpmm.load("plan.shiro", mesh)   # no MWVC re-run per process
+
+Autotune decision procedure (all offline, α-β model from ``comm_model``):
+
+1. ``build_plan(a, P, strategy, pad_to)`` — the flat SHIRO plan (MWVC).
+2. flat vs hierarchical: ``hier="auto"`` derives a (G, L) grouping from
+   ``net.group_size`` and keeps the hierarchical executor iff
+   ``modeled_time_hier`` beats ``modeled_time`` at ``n_dense_hint`` dense
+   columns; an explicit ``(G, L)`` forces it; ``None`` stays flat.
+3. schedule: ``"auto"`` sweeps K = 1..k_max bucketed ppermute schedules
+   against the single max-padded all_to_all (``choose_schedule`` /
+   ``choose_hier_schedule``); ``"single"`` keeps the paper-style round;
+   an int K forces that bucketing.
+4. every backend in ``backends`` gets its layout prepared once; calls pick
+   among them (``h(b, backend="bsr")``).
+
+The handle memoizes jitted executables keyed by ``(n_cols, dtype,
+backend)`` so repeated serving calls never re-lower; inside an outer
+``jax.jit`` (e.g. a training step) it transparently falls back to the
+traceable executor path instead. ``save``/``load`` serialize only the
+host-side plan (NumPy) — device arrays and executables are rebuilt
+deterministically on load, so a serving fleet ships preprocessed plans
+instead of re-running MWVC per process.
+
+Drop to the low-level layer when you need a custom communication schedule
+object, a mesh the handle's axis conventions don't cover, or per-call
+control of exec-plan internals — the handle composes exactly those
+functions and nothing else.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..compat import make_mesh as _compat_make_mesh
+from .comm_model import (
+    NetworkSpec, TSUBAME_LIKE, choose_hier_schedule, choose_schedule,
+    modeled_time, modeled_time_hier, modeled_time_hier_schedule,
+    modeled_time_schedule,
+)
+from .comm_schedule import (
+    CommSchedule, build_comm_schedule, build_hier_comm_schedule,
+    single_round_hier_schedule, single_round_schedule,
+)
+from .dist_spmm import (
+    BackendSpec, FlatExecPlan, HierExecPlan, flat_exec_arrays, flat_spmm,
+    hier_exec_arrays, hier_spmm,
+)
+from .hierarchy import HierPlan, build_hier_plan
+from .local_backend import get_backend
+from .planner import SpmmPlan, Strategy, build_plan
+from .sparse import CSRMatrix
+
+__all__ = [
+    "SpmmConfig",
+    "DistSpmm",
+    "compile_spmm",
+    "make_spmm_fn",
+    "register_lowering_hook",
+    "unregister_lowering_hook",
+]
+
+_SCHEDULE_POLICIES = ("auto", "single")
+_SAVE_FORMAT = "shiro.DistSpmm"
+_SAVE_VERSION = 1
+
+# hooks called as hook(handle, (n_cols, dtype_name, backend)) each time the
+# handle lowers+compiles a NEW executable — tests count cache behavior here
+_LOWERING_HOOKS: List[Callable[["DistSpmm", Tuple[int, str, str]], None]] = []
+
+
+def register_lowering_hook(fn: Callable) -> Callable:
+    """Install a callback fired on every fresh executable lowering."""
+    _LOWERING_HOOKS.append(fn)
+    return fn
+
+
+def unregister_lowering_hook(fn: Callable) -> None:
+    _LOWERING_HOOKS.remove(fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmmConfig:
+    """Everything ``compile_spmm`` needs beyond the matrix and the mesh.
+
+    ``strategy``       planner cover strategy ('block'|'col'|'row'|'joint').
+    ``hier``           None = flat executor; ``(G, L)`` forces the two-tier
+                       executor; ``"auto"`` derives (G, L) from
+                       ``net.group_size`` and keeps it iff the α-β model
+                       says it wins.
+    ``backends``       local-compute layouts to prepare (names or
+                       LocalSpmmBackend instances); calls select per-call.
+    ``default_backend`` name used when ``h(b)`` gets no ``backend=``
+                       (default: the first entry of ``backends``).
+    ``schedule``       ``"auto"`` = model-picked (single vs bucketed
+                       K=1..k_max); ``"single"`` = the paper-style
+                       max-padded all_to_all; an int K forces a K-class
+                       bucketed schedule.
+    ``net``            two-tier NetworkSpec the autotuner scores against.
+    ``pad_to``         slot-count rounding forwarded to ``build_plan``.
+    ``n_dense_hint``   dense column count the offline model evaluates at
+                       (the handle itself serves any N).
+    ``k_max``          upper bound of the schedule-K sweep under "auto".
+    """
+
+    strategy: Strategy = "joint"
+    hier: Union[str, Tuple[int, int], None] = None
+    backends: Tuple[BackendSpec, ...] = ("coo",)
+    default_backend: Optional[str] = None
+    schedule: Union[str, int] = "auto"
+    net: NetworkSpec = TSUBAME_LIKE
+    pad_to: int = 1
+    n_dense_hint: int = 64
+    k_max: int = 4
+
+    def __post_init__(self) -> None:
+        if isinstance(self.schedule, bool) or not (
+                self.schedule in _SCHEDULE_POLICIES
+                or (isinstance(self.schedule, int) and self.schedule >= 1)):
+            raise ValueError(
+                f"schedule must be 'auto', 'single' or an int K >= 1; "
+                f"got {self.schedule!r}")
+        if not (self.hier is None or self.hier == "auto"
+                or (isinstance(self.hier, tuple) and len(self.hier) == 2)):
+            raise ValueError(
+                f"hier must be None, 'auto' or a (G, L) tuple; "
+                f"got {self.hier!r}")
+        if not self.backends:
+            raise ValueError("at least one backend is required")
+
+    def backend_names(self) -> Tuple[str, ...]:
+        return tuple(get_backend(spec).name for spec in self.backends)
+
+
+# ---------------------------------------------------------------------------
+# mesh resolution
+# ---------------------------------------------------------------------------
+
+
+def _as_device_array(mesh: Union[Mesh, int]) -> np.ndarray:
+    if isinstance(mesh, Mesh):
+        return np.asarray(mesh.devices).reshape(-1)
+    P = int(mesh)
+    devs = jax.devices()
+    if P > len(devs):
+        raise ValueError(f"mesh needs {P} devices, only {len(devs)} present")
+    return np.asarray(devs[:P])
+
+
+def _flat_mesh(mesh: Union[Mesh, int]) -> Tuple[Mesh, str]:
+    """A 1-axis mesh over the given mesh's devices (reused when possible)."""
+    if isinstance(mesh, Mesh) and len(mesh.axis_names) == 1:
+        return mesh, mesh.axis_names[0]
+    if not isinstance(mesh, Mesh):
+        P = int(mesh)
+        return _compat_make_mesh((P,), ("x",),
+                                 devices=jax.devices()[:P]), "x"
+    return Mesh(_as_device_array(mesh), ("x",)), "x"
+
+
+def _hier_mesh(mesh: Union[Mesh, int], G: int, L: int
+               ) -> Tuple[Mesh, str, str]:
+    """A (G, L) mesh over the given mesh's devices (reused when possible)."""
+    if (isinstance(mesh, Mesh) and len(mesh.axis_names) == 2
+            and tuple(mesh.devices.shape) == (G, L)):
+        return mesh, mesh.axis_names[0], mesh.axis_names[1]
+    devs = _as_device_array(mesh)
+    if devs.size != G * L:
+        raise ValueError(f"mesh has {devs.size} devices, need G*L={G * L}")
+    return Mesh(devs.reshape(G, L), ("g", "l")), "g", "l"
+
+
+def _auto_grouping(P: int, net: NetworkSpec) -> Optional[Tuple[int, int]]:
+    """Largest fast-tier group size L | P with 2 <= L <= net.group_size."""
+    for L in range(min(int(net.group_size), P - 1), 1, -1):
+        if P % L == 0 and P // L >= 2:
+            return P // L, L
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the handle
+# ---------------------------------------------------------------------------
+
+
+def _is_tracer(x: Any) -> bool:
+    try:
+        return isinstance(x, jax.core.Tracer)
+    except AttributeError:  # pragma: no cover — future jax.core reshuffles
+        return hasattr(x, "aval") and not isinstance(x, (np.ndarray,
+                                                         jax.Array))
+
+
+class DistSpmm:
+    """A compiled distributed-SpMM handle: ``C = A @ B`` behind one call.
+
+    Built by ``compile_spmm`` (or ``DistSpmm.load``); owns the offline
+    plan, the autotuned schedule, the prepared backend layouts, and a
+    memoized cache of AOT-compiled executables keyed by
+    ``(n_cols, dtype, backend)``. Calls with concrete arrays hit the
+    cache; calls under an outer trace (``jax.jit`` / ``grad`` around the
+    handle) transparently use the traceable executor path instead.
+    """
+
+    def __init__(self, *, config: SpmmConfig, plan: SpmmPlan,
+                 hier: Optional[HierPlan], schedule: CommSchedule,
+                 ex: Union[FlatExecPlan, HierExecPlan], mesh: Mesh,
+                 axis_kwargs: Dict[str, str], decisions: Dict[str, Any]):
+        self.config = config
+        self.plan = plan
+        self.hier = hier
+        self.schedule = schedule
+        self.ex = ex
+        self.mesh = mesh
+        self.axis_kwargs = dict(axis_kwargs)
+        self.decisions = dict(decisions)
+        self.default_backend = (config.default_backend
+                                or config.backend_names()[0])
+        if self.default_backend not in self.ex.backends:
+            raise ValueError(
+                f"default_backend {self.default_backend!r} not among "
+                f"prepared backends {self.ex.backends}")
+        # (n_cols, dtype_name, backend) -> compiled executable
+        self._executables: Dict[Tuple[int, str, str], Any] = {}
+        self.lowerings: List[Tuple[int, str, str]] = []
+        self.cache_hits = 0
+        # B is row-sharded over every mesh axis; pinning it at lowering
+        # time lets the AOT executables accept any caller layout (we
+        # reshard on call instead of failing the dispatch-time check)
+        if hier is not None:
+            spec = PartitionSpec(tuple(self.axis_kwargs.values()))
+        else:
+            spec = PartitionSpec(self.axis_kwargs["axis"])
+        self._in_sharding = NamedSharding(self.mesh, spec)
+
+    # ----- execution ---------------------------------------------------
+
+    @property
+    def strategy(self) -> str:
+        """Chosen executor tier: 'flat' or 'hier'."""
+        return "hier" if self.hier is not None else "flat"
+
+    @property
+    def backends(self) -> Tuple[str, ...]:
+        return self.ex.backends
+
+    def _backend_name(self, backend: Optional[BackendSpec]) -> str:
+        if backend is None:
+            return self.default_backend
+        return get_backend(backend).name
+
+    def _raw_call(self, b: jax.Array, backend: str) -> jax.Array:
+        """The traceable executor path (used under jit and for lowering)."""
+        if self.hier is not None:
+            return hier_spmm(self.ex, b, self.mesh, backend=backend,
+                             **self.axis_kwargs)
+        return flat_spmm(self.ex, b, self.mesh, backend=backend,
+                         **self.axis_kwargs)
+
+    def _executable(self, n_cols: int, dtype, backend: str):
+        key = (int(n_cols), jnp.dtype(dtype).name, backend)
+        compiled = self._executables.get(key)
+        if compiled is not None:
+            self.cache_hits += 1
+            return compiled
+        fn = jax.jit(lambda b: self._raw_call(b, backend),
+                     in_shardings=self._in_sharding)
+        sds = jax.ShapeDtypeStruct((self.plan.shape[1], int(n_cols)),
+                                   jnp.dtype(dtype))
+        compiled = fn.lower(sds).compile()
+        self._executables[key] = compiled
+        self.lowerings.append(key)
+        for hook in list(_LOWERING_HOOKS):
+            hook(self, key)
+        return compiled
+
+    def __call__(self, b, backend: Optional[BackendSpec] = None) -> jax.Array:
+        """``C = A @ b`` — cached executable, or traced inline under jit."""
+        name = self._backend_name(backend)
+        if _is_tracer(b):
+            return self._raw_call(b, name)
+        b = jax.device_put(jnp.asarray(b), self._in_sharding)
+        return self._executable(b.shape[1], b.dtype, name)(b)
+
+    def lowered_hlo(self, n_cols: Optional[int] = None, dtype=jnp.float32,
+                    backend: Optional[BackendSpec] = None) -> str:
+        """Optimized HLO of the (cached) executable for one call shape."""
+        n = int(n_cols if n_cols is not None else self.config.n_dense_hint)
+        name = self._backend_name(backend)
+        return self._executable(n, dtype, name).as_text()
+
+    # ----- introspection ----------------------------------------------
+
+    def cache_info(self) -> Dict[str, Any]:
+        return {"lowerings": len(self.lowerings),
+                "hits": self.cache_hits,
+                "keys": tuple(self.lowerings)}
+
+    def stats(self) -> Dict[str, Any]:
+        """Autotune decisions + analytic/padded volumes + cache state."""
+        plan = self.plan
+        sched = self.schedule
+        out: Dict[str, Any] = dict(self.decisions)
+        out.update(
+            strategy=self.strategy,
+            plan_strategy=plan.strategy,
+            P=plan.P,
+            shape=plan.shape,
+            backends=self.backends,
+            default_backend=self.default_backend,
+            schedule_kind=sched.kind,
+            schedule_K=sched.K if sched.kind == "bucketed" else 1,
+            volume_rows=plan.volume_rows(),
+            volume_rows_padded=sched.volume_rows_padded(),
+            cache=self.cache_info(),
+        )
+        if self.hier is not None:
+            out.update(G=self.hier.G, L=self.hier.L,
+                       volume_rows_padded_single=single_round_hier_schedule(
+                           self.hier).volume_rows_padded())
+        else:
+            out["volume_rows_padded_single"] = plan.volume_rows_padded()
+        return out
+
+    def __repr__(self) -> str:
+        sched = self.schedule
+        tier = (f"hier(G={self.hier.G},L={self.hier.L})"
+                if self.hier is not None else "flat")
+        return (f"DistSpmm({self.plan.shape[0]}x{self.plan.shape[1]}, "
+                f"P={self.plan.P}, {tier}, schedule={sched.kind}"
+                f"{f'/K={sched.K}' if sched.kind == 'bucketed' else ''}, "
+                f"backends={self.backends})")
+
+    # ----- serialization ----------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Persist the host-side plan (NumPy only — no device state).
+
+        The file carries the offline planning results (SpmmPlan / HierPlan
+        / chosen CommSchedule / decisions); device arrays and executables
+        are rebuilt deterministically by ``load``, so loading is cheap and
+        never re-runs MWVC.
+
+        The container is a pickle: ``load`` only plans shipped over a
+        trusted channel (your own artifact store / image), exactly like
+        model checkpoints — unpickling attacker-controlled files executes
+        arbitrary code.
+        """
+        payload = {
+            "format": _SAVE_FORMAT,
+            "version": _SAVE_VERSION,
+            "config": self.config,
+            "plan": self.plan,
+            "hier": self.hier,
+            "schedule": self.schedule,
+            "decisions": self.decisions,
+        }
+        with open(path, "wb") as f:
+            pickle.dump(payload, f)
+
+    @classmethod
+    def load(cls, path: str, mesh: Union[Mesh, int]) -> "DistSpmm":
+        """Rebuild a handle from ``save`` output on this process's mesh.
+
+        TRUSTED INPUT ONLY: the file is a pickle (see ``save``) — load
+        plans from your own fleet's artifact channel, never from
+        untrusted sources.
+        """
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+        if payload.get("format") != _SAVE_FORMAT:
+            raise ValueError(f"{path!r} is not a saved DistSpmm handle")
+        if payload.get("version") != _SAVE_VERSION:
+            raise ValueError(
+                f"unsupported DistSpmm save version {payload.get('version')}")
+        return _materialize(payload["config"], payload["plan"],
+                            payload["hier"], payload["schedule"],
+                            payload["decisions"], mesh)
+
+
+# ---------------------------------------------------------------------------
+# compilation pipeline
+# ---------------------------------------------------------------------------
+
+
+def _materialize(config: SpmmConfig, plan: SpmmPlan,
+                 hier: Optional[HierPlan], schedule: CommSchedule,
+                 decisions: Dict[str, Any], mesh: Union[Mesh, int]
+                 ) -> DistSpmm:
+    """Deterministic device-side prep: exec arrays + mesh + handle."""
+    if hier is not None:
+        m, ga, la = _hier_mesh(mesh, hier.G, hier.L)
+        ex = hier_exec_arrays(hier, backends=config.backends,
+                              schedule=schedule)
+        axis_kwargs = {"group_axis": ga, "local_axis": la}
+    else:
+        m, ax = _flat_mesh(mesh)
+        ex = flat_exec_arrays(plan, backends=config.backends,
+                              schedule=schedule)
+        axis_kwargs = {"axis": ax}
+    return DistSpmm(config=config, plan=plan, hier=hier, schedule=schedule,
+                    ex=ex, mesh=m, axis_kwargs=axis_kwargs,
+                    decisions=decisions)
+
+
+def compile_spmm(a: CSRMatrix, mesh: Union[Mesh, int],
+                 config: Optional[SpmmConfig] = None,
+                 **overrides) -> DistSpmm:
+    """Plan, autotune and prepare a distributed SpMM handle for ``a``.
+
+    ``mesh``: a ``jax.sharding.Mesh`` (any axis layout — the handle
+    re-axes its devices as needed) or an int P (first P local devices).
+    ``config`` fields can also be passed as keyword overrides:
+    ``compile_spmm(a, 8, backends=("coo", "bsr"), hier="auto")``.
+    """
+    config = config or SpmmConfig()
+    if overrides:
+        config = dataclasses.replace(config, **overrides)
+    P = int(_as_device_array(mesh).size)
+    net, n_hint = config.net, config.n_dense_hint
+
+    plan = build_plan(a, P, config.strategy, pad_to=config.pad_to)
+    decisions: Dict[str, Any] = {
+        "net": net.name,
+        "n_dense_hint": n_hint,
+        "modeled_time_flat": modeled_time(plan, n_hint, net),
+    }
+
+    # ----- flat vs hierarchical ---------------------------------------
+    hier: Optional[HierPlan] = None
+    if config.hier is not None:
+        gl = (_auto_grouping(P, net) if config.hier == "auto"
+              else (int(config.hier[0]), int(config.hier[1])))
+        if gl is not None:
+            G, L = gl
+            if G * L != P:
+                raise ValueError(f"hier=({G},{L}) incompatible with P={P}")
+            cand = build_hier_plan(plan, G, L, pad_to=config.pad_to)
+            t_hier = modeled_time_hier(cand, n_hint, net)
+            decisions["modeled_time_hier"] = t_hier
+            decisions["hier_candidate"] = (G, L)
+            if config.hier != "auto" or \
+                    t_hier < decisions["modeled_time_flat"]:
+                hier = cand
+
+    # ----- communication schedule -------------------------------------
+    if hier is not None:
+        if config.schedule == "single":
+            schedule = single_round_hier_schedule(hier)
+        elif isinstance(config.schedule, int):
+            schedule = build_hier_comm_schedule(hier, K=config.schedule)
+        else:  # auto
+            schedule, t = choose_hier_schedule(hier, n_hint, net,
+                                               k_max=config.k_max)
+            decisions["modeled_time_schedule"] = t
+        if "modeled_time_schedule" not in decisions:
+            decisions["modeled_time_schedule"] = modeled_time_hier_schedule(
+                schedule, n_hint, net)
+    else:
+        if config.schedule == "single":
+            schedule = single_round_schedule(plan)
+        elif isinstance(config.schedule, int):
+            schedule = build_comm_schedule(plan, K=config.schedule)
+        else:  # auto
+            schedule, t = choose_schedule(plan, n_hint, net,
+                                          k_max=config.k_max)
+            decisions["modeled_time_schedule"] = t
+        if "modeled_time_schedule" not in decisions:
+            decisions["modeled_time_schedule"] = modeled_time_schedule(
+                plan, schedule, n_hint, net)
+
+    return _materialize(config, plan, hier, schedule, decisions, mesh)
+
+
+# ---------------------------------------------------------------------------
+# model-facing closure (migrated from models.gnn)
+# ---------------------------------------------------------------------------
+
+
+def make_spmm_fn(ex: Union[DistSpmm, FlatExecPlan, HierExecPlan],
+                 mesh: Optional[Mesh] = None,
+                 backend: Optional[BackendSpec] = None,
+                 **axis_kwargs) -> Callable[[jax.Array], jax.Array]:
+    """Close a SHIRO executor over its plan for model code (``H -> Â·H``).
+
+    Preferred form: pass a ``DistSpmm`` handle (no mesh needed — the
+    handle owns it); inside a jitted training step the closure traces the
+    executor, eagerly it reuses the handle's executable cache. The raw
+    ``FlatExecPlan`` / ``HierExecPlan`` forms remain for low-level code
+    and need the ``mesh`` (plus optional ``axis=`` / ``group_axis=`` /
+    ``local_axis=`` overrides).
+    """
+    if isinstance(ex, DistSpmm):
+        if axis_kwargs:
+            raise TypeError("axis overrides don't apply to a DistSpmm "
+                            "handle; it owns its mesh axes")
+        return lambda h: ex(h, backend=backend)
+    if mesh is None:
+        raise TypeError("mesh is required when passing a raw exec plan")
+    if isinstance(ex, HierExecPlan):
+        return lambda h: hier_spmm(ex, h, mesh, backend=backend,
+                                   **axis_kwargs)
+    return lambda h: flat_spmm(ex, h, mesh, backend=backend, **axis_kwargs)

@@ -18,7 +18,8 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from .comm_schedule import (
-    CommSchedule, build_comm_schedule, single_round_schedule,
+    CommSchedule, build_comm_schedule, build_hier_comm_schedule,
+    single_round_hier_schedule, single_round_schedule,
 )
 from .planner import SpmmPlan, build_plan
 from .hierarchy import HierPlan
@@ -34,6 +35,8 @@ __all__ = [
     "modeled_time_hier",
     "modeled_time_schedule",
     "choose_schedule",
+    "modeled_time_hier_schedule",
+    "choose_hier_schedule",
     "balance_stats",
 ]
 
@@ -169,31 +172,19 @@ def _tier(net: NetworkSpec, P: int) -> Tuple[float, float]:
     return net.bw_inter, net.lat_inter
 
 
-def modeled_time_schedule(
-    plan: SpmmPlan,
-    sched: CommSchedule,
-    n_dense: int,
-    net: NetworkSpec,
-    sz_dt: int = 4,
-) -> float:
-    """α-β communication time of one schedule realization.
+def _schedule_alpha_beta_time(sched: CommSchedule, unit: float, bw: float,
+                              lat: float) -> float:
+    """α-β time of one schedule realization on a fixed (bw, lat) tier.
 
-    ``single``: two max-padded all_to_alls — per-process bytes
-    ``P (max_b + max_c) · N · sz`` behind 2 α terms (one per part).
-    ``bucketed``: each round is charged the same way — one α per PART it
-    carries traffic on (the B exchange and the C exchange are separate
-    program phases; a round's shift permutes within one phase are
-    disjoint matchings and overlap), plus the round's padded
-    per-process bytes. More rounds → finer slot classes → fewer padded
-    bytes but more α terms; this is the trade ``choose_schedule``
-    optimizes over K, with latency accounted consistently across both
-    schedule kinds.
+    ``single``: two max-padded all_to_alls — the per-process operand rows
+    behind 2 α terms (one per part). ``bucketed``: each round is charged
+    one α per PART it carries traffic on (the B exchange and the C
+    exchange are separate program phases; a round's shift permutes within
+    one phase are disjoint matchings and overlap), plus the round's
+    padded per-process bytes.
     """
-    unit = n_dense * sz_dt
-    bw, lat = _tier(net, plan.P)
     if sched.kind == "single":
-        rows = sched.P * (sched.max_b + sched.max_c)
-        return 2 * lat + rows * unit / bw
+        return 2 * lat + sched.rows_per_process() * unit / bw
     t = 0.0
     for rnd in sched.rounds:
         rows = sum(sched.slots_b[d - 1] + sched.slots_c[d - 1]
@@ -202,6 +193,25 @@ def modeled_time_schedule(
                   + any(sched.slots_c[d - 1] > 0 for d in rnd.shifts))
         t += phases * lat + rows * unit / bw
     return t
+
+
+def modeled_time_schedule(
+    plan: SpmmPlan,
+    sched: CommSchedule,
+    n_dense: int,
+    net: NetworkSpec,
+    sz_dt: int = 4,
+) -> float:
+    """α-β communication time of one flat schedule realization.
+
+    More rounds → finer slot classes → fewer padded bytes but more α
+    terms; this is the trade ``choose_schedule`` optimizes over K, with
+    latency accounted consistently across both schedule kinds (see
+    ``_schedule_alpha_beta_time``). The tier follows the exchange span
+    (``_tier``): intra for P within one group, inter beyond.
+    """
+    bw, lat = _tier(net, plan.P)
+    return _schedule_alpha_beta_time(sched, n_dense * sz_dt, bw, lat)
 
 
 def choose_schedule(
@@ -231,6 +241,54 @@ def choose_schedule(
             continue
         seen.add(key)
         t = modeled_time_schedule(plan, sched, n_dense, net, sz_dt)
+        if t < best[1]:
+            best = (sched, t)
+    return best
+
+
+def modeled_time_hier_schedule(
+    sched: CommSchedule,
+    n_dense: int,
+    net: NetworkSpec,
+    sz_dt: int = 4,
+) -> float:
+    """α-β time of a hierarchical INTER-GROUP schedule realization.
+
+    The inter-group collectives always run on the slow tier, so the tier
+    choice is fixed (unlike ``modeled_time_schedule``). The single round's
+    per-process operand rows include the own-group slots the dense
+    collective cannot drop; bucketed rounds serve own-group traffic with
+    a wire-free local slice (``rows_per_process`` already excludes it).
+    """
+    return _schedule_alpha_beta_time(sched, n_dense * sz_dt,
+                                     net.bw_inter, net.lat_inter)
+
+
+def choose_hier_schedule(
+    hier: HierPlan,
+    n_dense: int,
+    net: NetworkSpec,
+    k_max: int = 4,
+    sz_dt: int = 4,
+) -> Tuple[CommSchedule, float]:
+    """Pick the fastest hierarchical inter-group schedule realization.
+
+    Mirrors ``choose_schedule`` one tier up: candidates are the single
+    max-padded all_to_all pair and bucketed group-shift schedules for
+    K = 1..k_max. Returns (schedule, modeled_seconds).
+    """
+    single = single_round_hier_schedule(hier)
+    best: Tuple[CommSchedule, float] = (
+        single, modeled_time_hier_schedule(single, n_dense, net, sz_dt))
+    seen = set()
+    for K in range(1, max(1, k_max) + 1):
+        sched = build_hier_comm_schedule(hier, K=K)
+        key = (sched.slots_b, sched.slots_c,
+               sched.local_slot_b, sched.local_slot_c)
+        if key in seen:
+            continue
+        seen.add(key)
+        t = modeled_time_hier_schedule(sched, n_dense, net, sz_dt)
         if t < best[1]:
             best = (sched, t)
     return best

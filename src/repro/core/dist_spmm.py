@@ -62,6 +62,7 @@ from .local_backend import (
 from .planner import SpmmPlan, local_piece_csrs
 
 __all__ = [
+    "BackendSpec",
     "FlatExecPlan",
     "HierExecPlan",
     "flat_exec_arrays",

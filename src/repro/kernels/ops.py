@@ -5,9 +5,17 @@ backends, interpret-mode Pallas when ``REPRO_PALLAS_INTERPRET=1`` (CI /
 CPU validation), and the pure-jnp oracle otherwise. All three paths are
 numerically interchangeable (tests assert so), which keeps the distributed
 executors platform-portable.
+
+The executor-path ops (``gather_rows_op`` / ``scatter_add_rows_exec_op``)
+carry ``custom_jvp`` rules whose tangents run through the jnp oracles:
+``pallas_call`` has no JVP, but both ops are linear in their float
+operands, so training (e.g. the GCN example differentiating through
+``flat_spmm``) works on every kernel backend — forward stays on the
+selected kernel, derivatives take the oracle path.
 """
 from __future__ import annotations
 
+import functools
 import os
 from typing import Tuple
 
@@ -51,13 +59,27 @@ def bsr_spmm_op(block_cols: jax.Array, blocks: jax.Array, b: jax.Array,
     return _ref.bsr_spmm_ref(block_cols, blocks, b)
 
 
-def gather_rows_op(b: jax.Array, idx: jax.Array, *, bn: int = 512) -> jax.Array:
+@functools.partial(jax.custom_jvp, nondiff_argnums=(2,))
+def _gather_rows(b: jax.Array, idx: jax.Array, bn: int) -> jax.Array:
     be = kernel_backend()
     if be == "pallas":
         return gather_rows_pallas(b, idx, bn=bn)
     if be == "interpret":
         return gather_rows_pallas(b, idx, bn=bn, interpret=True)
     return _ref.gather_rows_ref(b, idx)
+
+
+@_gather_rows.defjvp
+def _gather_rows_jvp(bn, primals, tangents):
+    b, idx = primals
+    b_dot, _ = tangents
+    # linear in b: the tangent is the same gather, via the transposable
+    # jnp oracle (reverse mode transposes it to a scatter-add)
+    return _gather_rows(b, idx, bn), _ref.gather_rows_ref(b_dot, idx)
+
+
+def gather_rows_op(b: jax.Array, idx: jax.Array, *, bn: int = 512) -> jax.Array:
+    return _gather_rows(b, idx, bn)
 
 
 def scatter_add_rows_op(c: jax.Array, partials: jax.Array, tgt: np.ndarray) -> jax.Array:
@@ -85,6 +107,7 @@ def pack_rows_op(b: jax.Array, idx: jax.Array) -> jax.Array:
     return out.reshape(idx.shape + (b.shape[1],))
 
 
+@jax.custom_jvp
 def scatter_add_rows_exec_op(c: jax.Array, partials: jax.Array,
                              tgt: jax.Array, perm: jax.Array,
                              meta: jax.Array) -> jax.Array:
@@ -102,3 +125,12 @@ def scatter_add_rows_exec_op(c: jax.Array, partials: jax.Array,
         return _ref.scatter_add_rows_ref(c, partials, tgt)
     return scatter_add_rows_sorted_pallas(
         c, partials[perm], meta, interpret=(be == "interpret"))
+
+
+@scatter_add_rows_exec_op.defjvp
+def _scatter_add_rows_exec_jvp(primals, tangents):
+    c, partials, tgt, perm, meta = primals
+    c_dot, p_dot = tangents[0], tangents[1]
+    # linear in (c, partials); integer plan maps carry no tangent
+    out = scatter_add_rows_exec_op(c, partials, tgt, perm, meta)
+    return out, _ref.scatter_add_rows_ref(c_dot, p_dot, tgt)

@@ -9,18 +9,13 @@ communication volume and modeled speedup end-to-end.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Union
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
 
-from ..core.dist_spmm import (
-    BackendSpec, FlatExecPlan, HierExecPlan, coo_spmm_local, flat_spmm,
-    hier_spmm,
-)
-from ..core.planner import build_plan
+from ..core.api import make_spmm_fn  # noqa: F401 — canonical home is core
 from ..core.sparse import CSRMatrix, csr_from_coo, COOMatrix
 
 __all__ = ["normalize_adjacency", "GCN", "gcn_forward", "gcn_loss",
@@ -61,22 +56,6 @@ class GCN:
              "b": jnp.zeros((dims[i + 1],))}
             for i in range(self.n_layers)
         ]
-
-
-def make_spmm_fn(ex: Union[FlatExecPlan, HierExecPlan], mesh: Mesh,
-                 backend: Optional[BackendSpec] = None,
-                 **axis_kwargs) -> Callable[[jax.Array], jax.Array]:
-    """Close a SHIRO executor over (exec plan, mesh) for ``gcn_forward``.
-
-    ``backend`` selects the local-compute substrate per call among the
-    layouts the plan was built with (``flat_exec_arrays(plan,
-    backends=("coo", "bsr"))``); ``axis_kwargs`` forwards ``axis=`` /
-    ``group_axis=`` / ``local_axis=`` overrides to the executor.
-    """
-    if isinstance(ex, HierExecPlan):
-        return lambda h: hier_spmm(ex, h, mesh, backend=backend,
-                                   **axis_kwargs)
-    return lambda h: flat_spmm(ex, h, mesh, backend=backend, **axis_kwargs)
 
 
 def gcn_forward(params: List[dict], feats: jax.Array, spmm_fn) -> jax.Array:

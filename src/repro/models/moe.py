@@ -34,7 +34,8 @@ from jax.sharding import PartitionSpec as P
 from ..distributed.context import DistContext
 from .config import ModelConfig
 
-__all__ = ["init_moe_params", "moe_layer", "moe_comm_rows"]
+__all__ = ["init_moe_params", "moe_layer", "moe_comm_rows",
+           "dispatch_matrix", "compile_dispatch"]
 
 
 def init_moe_params(key, cfg: ModelConfig, dtype) -> dict:
@@ -221,6 +222,69 @@ def _moe_ep_body(x, router, w1, w3, w2, *, cfg, m_axis, M, e_loc, cap,
     y = y.at[jnp.maximum(tm, 0)].add(
         jnp.where((tm >= 0)[:, None], recv_comb.reshape(M * cap, d), 0.0))
     return y.reshape(b, s, d)
+
+
+def dispatch_matrix(cfg: ModelConfig, tokens: int, M: int, seed: int = 0):
+    """The token→expert-slot dispatch as SHIRO's sparse operand.
+
+    Rows are expert slots (rank r owns rows [r·cap, (r+1)·cap)), columns
+    are tokens (rank q owns its T/M contiguous tokens); entry (s, t) = 1
+    means slot s consumes token t's activation, so ``C = A @ X`` is
+    exactly the dispatched activation buffer. A token routed to two
+    experts on the SAME rank contributes two slot rows but one column —
+    the joint MWVC cover fetches that column once, i.e. SHIRO's vertex
+    cover *is* the MoE dedup of ``shiro_dispatch``, recovered from the
+    sparsity pattern alone. Returns a ``CSRMatrix`` ready for
+    ``compile_dispatch`` / ``repro.compile_spmm``.
+    """
+    import numpy as np
+
+    from ..core.sparse import COOMatrix, csr_from_coo
+
+    if tokens % M:
+        raise ValueError(f"tokens={tokens} must be divisible by M={M}")
+    if M < 1 or cfg.n_experts % M:
+        raise ValueError(
+            f"M={M} must divide n_experts={cfg.n_experts} (experts are "
+            f"uniformly partitioned over the expert-parallel ranks)")
+    rng = np.random.default_rng(seed)
+    e_loc = cfg.n_experts // M
+    ids = np.stack([
+        rng.choice(cfg.n_experts, size=cfg.top_k, replace=False)
+        for _ in range(tokens)
+    ])
+    dst = ids // e_loc  # [T, top_k] destination EP rank per assignment
+    rows, cols = [], []
+    slot_rows = [[] for _ in range(M)]
+    for t in range(tokens):
+        for r in dst[t]:
+            slot_rows[int(r)].append(t)
+    cap = max(max((len(s) for s in slot_rows), default=1), 1)
+    for r in range(M):
+        for s, t in enumerate(slot_rows[r]):
+            rows.append(r * cap + s)
+            cols.append(t)
+    return csr_from_coo(COOMatrix(
+        (M * cap, tokens),
+        np.asarray(rows, np.int32), np.asarray(cols, np.int32),
+        np.ones(len(rows), np.float32)))
+
+
+def compile_dispatch(cfg: ModelConfig, tokens: int, M: int, mesh=None,
+                     config=None, seed: int = 0):
+    """Front-door handle for the MoE dispatch SpMM (``repro.compile_spmm``).
+
+    ``mesh`` defaults to a flat M-device mesh; ``config`` defaults to the
+    joint strategy with the autotuned schedule — the handle's ``stats()``
+    report the dedup (analytic volume vs the per-assignment row count)
+    and the schedule/backend decisions for this routing snapshot.
+    """
+    from ..core.api import SpmmConfig, compile_spmm
+
+    a = dispatch_matrix(cfg, tokens, M, seed=seed)
+    return compile_spmm(a, M if mesh is None else mesh,
+                        config or SpmmConfig(strategy="joint",
+                                             schedule="auto"))
 
 
 def moe_comm_rows(cfg: ModelConfig, tokens: int, M: int, seed: int = 0):

@@ -1,0 +1,26 @@
+"""`shiro` — the paper-branded alias for the repro front-door API.
+
+    import shiro
+    handle = shiro.compile(a, mesh, shiro.SpmmConfig(hier="auto",
+                                                     schedule="auto"))
+    c = handle(b)
+
+``shiro.compile`` is ``repro.compile_spmm``; everything here re-exports
+``repro.core.api`` so downstream code can depend on the short spelling.
+"""
+from repro.core.api import (  # noqa: F401
+    DistSpmm, SpmmConfig, compile_spmm, make_spmm_fn,
+    register_lowering_hook, unregister_lowering_hook,
+)
+
+compile = compile_spmm  # noqa: A001 — the intended public spelling
+
+__all__ = [
+    "DistSpmm",
+    "SpmmConfig",
+    "compile",
+    "compile_spmm",
+    "make_spmm_fn",
+    "register_lowering_hook",
+    "unregister_lowering_hook",
+]
