@@ -11,7 +11,7 @@ families, which is what the paper's figures measure.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict
 
 import numpy as np
 

@@ -20,13 +20,18 @@ from .common import DATASETS, fmt_row, time_call
 P = 8
 N_DENSE = 64
 
-# the ablation axes: cover strategy, schedule on/off, executor tier
+# the ablation axes: cover strategy, schedule on/off, executor tier,
+# and round-pipelined (overlap) on/off for the bucketed schedules
 STEPS = (
     ("col", SpmmConfig(strategy="col", schedule="single")),
     ("joint", SpmmConfig(schedule="single")),
-    ("joint+sched", SpmmConfig(schedule="auto")),
+    ("joint+sched", SpmmConfig(schedule="auto", overlap=False)),
+    ("joint+sched+ovl", SpmmConfig(schedule="auto", overlap="auto")),
     ("joint+hier", SpmmConfig(hier=(2, 4), schedule="single")),
-    ("joint+hier+sched", SpmmConfig(hier=(2, 4), schedule="auto")),
+    ("joint+hier+sched", SpmmConfig(hier=(2, 4), schedule="auto",
+                                    overlap=False)),
+    ("joint+hier+sched+ovl", SpmmConfig(hier=(2, 4), schedule="auto",
+                                        overlap="auto")),
 )
 
 
@@ -51,8 +56,9 @@ def run() -> list:
                 f"padded_rows={st['volume_rows_padded']};"
                 f"strategy={st['strategy']};"
                 f"schedule={st['schedule_kind']};K={st['schedule_K']};"
+                f"overlap={st['overlap']};"
                 f"backend={st['default_backend']}"))
-        sp = results["col"] / max(results["joint+hier+sched"], 1e-9)
+        sp = results["col"] / max(results["joint+hier+sched+ovl"], 1e-9)
         rows.append(fmt_row(f"fig10/{ds}/speedup", 0.0,
                             f"col_over_shiro={sp:.2f}x"))
     return rows

@@ -14,7 +14,7 @@ from repro.core.comm_model import TSUBAME_LIKE, modeled_time, modeled_time_hier
 from repro.core.hierarchy import build_hier_plan
 from repro.core.planner import build_plan
 
-from .common import DATASETS, fmt_row, time_call
+from .common import DATASETS, fmt_row
 
 N_DENSE = 32
 PROCS = [2, 4, 8, 16, 32, 64, 128]

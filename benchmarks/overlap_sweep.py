@@ -1,0 +1,83 @@
+"""Comm/compute overlap sweep (beyond-paper; complements fig10).
+
+For each dataset family at P=8: the α-β model's staged (comm + comp
+serialized) vs round-pipelined (Σ_k max(comm_k, comp_k)) totals per
+bucketed K, measured wall time of the staged vs overlapped flat
+executor, and the front door's autotuned execution-mode decision. The
+``modeled_time`` field of each K row is the BEST-mode total, so the CI
+bench gate (``run.py --compare``) trips when either execution mode's
+model regresses; ``padded_rows`` rides along for the same reason.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.api import SpmmConfig, compile_spmm
+from repro.core.comm_model import (
+    TSUBAME_LIKE, modeled_time_overlap, modeled_time_staged,
+)
+from repro.core.comm_schedule import build_comm_schedule
+from repro.core.dist_spmm import flat_exec_arrays, flat_spmm
+from repro.core.planner import build_plan
+from repro.launch.mesh import make_spmm_mesh
+
+from .common import DATASETS, fmt_row, time_call
+
+P = 8
+N_DENSE = 64
+SMOKE_DATASETS = ("social-pl", "mawi-hub")  # the CI smoke subset
+
+
+def run(datasets=None) -> list:
+    import jax.numpy as jnp
+
+    rows = []
+    if datasets is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+        datasets = SMOKE_DATASETS if smoke else list(DATASETS)
+    rng = np.random.default_rng(0)
+    mesh = make_spmm_mesh(P)
+    for ds in datasets:
+        a = DATASETS[ds](0)
+        plan = build_plan(a, P, "joint")
+        for K in (1, 2, 4):
+            sched = build_comm_schedule(plan, K=K)
+            t_st = modeled_time_staged(plan, sched, N_DENSE, TSUBAME_LIKE)
+            t_ov = modeled_time_overlap(plan, sched, N_DENSE, TSUBAME_LIKE)
+            rows.append(fmt_row(
+                f"overlap/{ds}/K{K}", 0.0,
+                f"modeled_time={min(t_st, t_ov):.3e};"
+                f"modeled_time_staged={t_st:.3e};"
+                f"modeled_time_overlap={t_ov:.3e};"
+                f"padded_rows={sched.volume_rows_padded()};"
+                f"hidden_frac={(t_st - t_ov) / max(t_st, 1e-30):.3f}"))
+
+        # measured: the same bucketed plan executed staged vs overlapped
+        import jax
+
+        sched = build_comm_schedule(plan, K=4)
+        ex = flat_exec_arrays(plan, schedule=sched)
+        b = jnp.asarray(
+            rng.standard_normal((a.shape[1], N_DENSE)).astype(np.float32))
+        us_st = time_call(jax.jit(lambda x: flat_spmm(ex, x, mesh)), b,
+                          warmup=2, iters=5)
+        us_ov = time_call(
+            jax.jit(lambda x: flat_spmm(ex, x, mesh, overlap=True)), b,
+            warmup=2, iters=5)
+        rows.append(fmt_row(f"overlap/{ds}/measured-staged", us_st,
+                            "mode=staged;K=4"))
+        rows.append(fmt_row(f"overlap/{ds}/measured-overlap", us_ov,
+                            "mode=overlap;K=4"))
+
+        # what the front door decides for this matrix
+        h = compile_spmm(a, P, SpmmConfig(schedule="auto", overlap="auto"))
+        st = h.stats()
+        rows.append(fmt_row(
+            f"overlap/{ds}/chosen", 0.0,
+            f"overlap={st['overlap']};kind={st['schedule_kind']};"
+            f"K={st['schedule_K']};"
+            f"modeled_time_staged={st['modeled_time_staged']:.3e};"
+            f"modeled_time_overlap={st['modeled_time_overlap']:.3e}"))
+    return rows

@@ -25,14 +25,33 @@ Flags:
                   CI diffs across PRs to catch schedule regressions.
                   Handle-driven benchmarks (fig10_ablation, fig11_ncols,
                   moe_dispatch) put the compile_spmm autotune decisions
-                  (strategy, schedule kind, K, backend) in the derived
-                  string, so every BENCH record carries what the front
-                  door decided for that matrix.
+                  (strategy, schedule kind, K, overlap, backend) in the
+                  derived string, so every BENCH record carries what the
+                  front door decided for that matrix.
+  --compare PATH  regression GATE: compare this run's records against a
+                  committed baseline (same --json format) and FAIL when
+                  any deterministic model field (padded_rows /
+                  modeled_time) exceeds baseline · (1 + --tolerance), or
+                  when a baseline record is missing from this run.
+  --tolerance F   relative slack for --compare (default 0.05).
+
+Exit codes (so CI can tell "regressed" from "crashed"):
+  0  all benchmarks ran; no gate violation
+  1  gate violation (--compare found regressions / missing records)
+  2  a benchmark family raised mid-sweep — its partial rows are still
+     emitted, plus one record carrying an "error" field
 """
 import argparse
 import json
 import sys
 import traceback
+
+EXIT_REGRESSED = 1
+EXIT_CRASHED = 2
+
+# deterministic model outputs the --compare gate checks (wall times vary
+# run to run and are tracked, not gated)
+GATE_FIELDS = ("padded_rows", "modeled_time")
 
 
 def _parse_derived(derived: str) -> dict:
@@ -63,6 +82,43 @@ def _records(rows) -> list:
     return recs
 
 
+def compare_records(current: list, baseline: list,
+                    tolerance: float) -> list:
+    """Gate check: list of human-readable violations (empty = pass).
+
+    For every baseline record (keyed by its unique ``bench`` name) the
+    matching current record must exist and keep each GATE_FIELDS value
+    within ``baseline · (1 + tolerance)``. Records carrying an "error"
+    field on either side are reported via the exit-code path, not here.
+    """
+    cur = {r["bench"]: r for r in current if "error" not in r}
+    violations = []
+    for base in baseline:
+        if "error" in base:
+            continue
+        name = base["bench"]
+        rec = cur.get(name)
+        if rec is None:
+            violations.append(f"{name}: missing from this run")
+            continue
+        for field in GATE_FIELDS:
+            if field not in base:
+                continue
+            try:
+                b, c = float(base[field]), float(rec.get(field, "nan"))
+            except (TypeError, ValueError):
+                violations.append(f"{name}.{field}: non-numeric "
+                                  f"({base.get(field)!r} -> {rec.get(field)!r})")
+                continue
+            if not c <= b * (1.0 + tolerance):
+                pct = (f"+{(c / b - 1.0) * 100.0:.1f}%" if b
+                       else "baseline was 0")
+                violations.append(
+                    f"{name}.{field}: {b:g} -> {c:g} "
+                    f"({pct} > {tolerance * 100.0:.0f}% tolerance)")
+    return violations
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="SHIRO benchmark harness (one module per figure)")
@@ -71,14 +127,19 @@ def main(argv=None) -> None:
                     help="run only these benchmark modules (repeatable)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write BENCH_* records as JSON to PATH")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="fail (exit 1) when padded_rows / modeled_time "
+                         "regress beyond --tolerance vs this baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="relative slack for --compare (default 0.05)")
     args = ap.parse_args(argv)
 
     from . import (fig5_patterns, fig7_scaling, fig8_volume, fig9_balance,
                    fig10_ablation, fig11_ncols, table3_gnn, moe_dispatch,
-                   sched_buckets)
+                   overlap_sweep, sched_buckets)
     modules = [fig5_patterns, fig7_scaling, fig8_volume, fig9_balance,
                fig10_ablation, fig11_ncols, table3_gnn, moe_dispatch,
-               sched_buckets]
+               sched_buckets, overlap_sweep]
     if args.only:
         short = {m.__name__.rsplit(".", 1)[-1]: m for m in modules}
         unknown = [o for o in args.only if o not in short]
@@ -89,9 +150,10 @@ def main(argv=None) -> None:
         modules = [short[o] for o in args.only]
 
     print("name,us_per_call,derived")
-    failed = 0
+    crashed = 0
     records = []
     for mod in modules:
+        short_name = mod.__name__.rsplit(".", 1)[-1]
         rows = []
         try:
             for row in mod.run():
@@ -101,18 +163,43 @@ def main(argv=None) -> None:
                 for row in mod.run_group_aware():
                     print(row, flush=True)
                     rows.append(row)
-        except Exception:
-            failed += 1
+        except Exception as e:
+            crashed += 1
             print(f"{mod.__name__},nan,ERROR", flush=True)
             traceback.print_exc(file=sys.stderr)
+            # partial records still ship, plus a marker the gate can
+            # tell apart from a regression (exit 2 vs 1)
+            records.append({"bench": f"BENCH_{short_name}",
+                            "error": f"{type(e).__name__}: {e}"})
         records += _records(rows)  # keep whatever the module got out
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"records": records}, f, indent=1, sort_keys=True)
         print(f"wrote {len(records)} records to {args.json}",
               file=sys.stderr)
-    if failed:
-        sys.exit(1)
+
+    violations = []
+    if args.compare:
+        try:
+            with open(args.compare) as f:
+                baseline = json.load(f)["records"]
+        except (OSError, ValueError, KeyError) as e:
+            # a broken harness/baseline is NOT a regression: exit 2 so
+            # the gate's 1-vs-2 contract stays honest
+            print(f"cannot load baseline {args.compare!r}: {e}",
+                  file=sys.stderr)
+            sys.exit(EXIT_CRASHED)
+        violations = compare_records(records, baseline, args.tolerance)
+        for v in violations:
+            print(f"REGRESSION {v}", file=sys.stderr)
+        if not violations:
+            print(f"gate: {len(baseline)} baseline records within "
+                  f"{args.tolerance * 100:.0f}% tolerance", file=sys.stderr)
+
+    if crashed:
+        sys.exit(EXIT_CRASHED)
+    if violations:
+        sys.exit(EXIT_REGRESSED)
 
 
 if __name__ == '__main__':

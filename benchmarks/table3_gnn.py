@@ -10,8 +10,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.dist_spmm import flat_exec_arrays, flat_spmm
 from repro.core.planner import build_plan

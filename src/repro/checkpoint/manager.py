@@ -22,9 +22,8 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import tempfile
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np

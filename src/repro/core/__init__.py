@@ -33,8 +33,10 @@ from .local_backend import (
 from .comm_model import (
     NetworkSpec, TSUBAME_LIKE, TPU_POD, AURORA_LIKE,
     strategy_volumes, modeled_time, modeled_time_hier, balance_stats,
-    modeled_time_schedule, choose_schedule,
-    modeled_time_hier_schedule, choose_hier_schedule,
+    modeled_time_schedule, modeled_time_staged, modeled_time_overlap,
+    choose_schedule,
+    modeled_time_hier_schedule, modeled_time_hier_staged,
+    modeled_time_hier_overlap, choose_hier_schedule,
 )
 from .comm_schedule import (
     CommRound, CommSchedule, build_comm_schedule, build_hier_comm_schedule,
@@ -62,8 +64,10 @@ __all__ = [
     "get_backend", "register_backend", "available_backends",
     "NetworkSpec", "TSUBAME_LIKE", "TPU_POD", "AURORA_LIKE",
     "strategy_volumes", "modeled_time", "modeled_time_hier", "balance_stats",
-    "modeled_time_schedule", "choose_schedule",
-    "modeled_time_hier_schedule", "choose_hier_schedule",
+    "modeled_time_schedule", "modeled_time_staged", "modeled_time_overlap",
+    "choose_schedule",
+    "modeled_time_hier_schedule", "modeled_time_hier_staged",
+    "modeled_time_hier_overlap", "choose_hier_schedule",
     "CommRound", "CommSchedule", "build_comm_schedule",
     "build_hier_comm_schedule", "single_round_schedule",
     "single_round_hier_schedule",

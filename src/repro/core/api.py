@@ -25,7 +25,12 @@ Autotune decision procedure (all offline, α-β model from ``comm_model``):
    against the single max-padded all_to_all (``choose_schedule`` /
    ``choose_hier_schedule``); ``"single"`` keeps the paper-style round;
    an int K forces that bucketing.
-4. every backend in ``backends`` gets its layout prepared once; calls pick
+4. execution mode: ``overlap="auto"`` keeps the round-pipelined executor
+   iff ``modeled_time_overlap`` (Σ_k max(comm_k, comp_k)) beats the
+   staged comm+comp total for the chosen schedule; the sweep in step 3
+   co-optimizes K with the mode. The decision lands in ``h.stats()``
+   (``overlap`` + both modeled times) and in BENCH records.
+5. every backend in ``backends`` gets its layout prepared once; calls pick
    among them (``h(b, backend="bsr")``).
 
 The handle memoizes jitted executables keyed by ``(n_cols, dtype,
@@ -45,7 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import pickle
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -55,8 +60,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from ..compat import make_mesh as _compat_make_mesh
 from .comm_model import (
     NetworkSpec, TSUBAME_LIKE, choose_hier_schedule, choose_schedule,
-    modeled_time, modeled_time_hier, modeled_time_hier_schedule,
-    modeled_time_schedule,
+    modeled_time, modeled_time_hier, modeled_time_hier_overlap,
+    modeled_time_hier_schedule, modeled_time_hier_staged,
+    modeled_time_overlap, modeled_time_schedule, modeled_time_staged,
 )
 from .comm_schedule import (
     CommSchedule, build_comm_schedule, build_hier_comm_schedule,
@@ -116,6 +122,13 @@ class SpmmConfig:
                        K=1..k_max); ``"single"`` = the paper-style
                        max-padded all_to_all; an int K forces a K-class
                        bucketed schedule.
+    ``overlap``        ``"auto"`` (default) = round-pipelined execution
+                       iff ``modeled_time_overlap`` beats the staged
+                       comm+comp total for the chosen plan; ``True``
+                       forces overlapped execution on bucketed
+                       schedules; ``False`` keeps staged execution.
+                       Single-round schedules have no rounds to
+                       pipeline and always execute staged.
     ``net``            two-tier NetworkSpec the autotuner scores against.
     ``pad_to``         slot-count rounding forwarded to ``build_plan``.
     ``n_dense_hint``   dense column count the offline model evaluates at
@@ -128,6 +141,7 @@ class SpmmConfig:
     backends: Tuple[BackendSpec, ...] = ("coo",)
     default_backend: Optional[str] = None
     schedule: Union[str, int] = "auto"
+    overlap: Union[str, bool] = "auto"
     net: NetworkSpec = TSUBAME_LIKE
     pad_to: int = 1
     n_dense_hint: int = 64
@@ -140,6 +154,10 @@ class SpmmConfig:
             raise ValueError(
                 f"schedule must be 'auto', 'single' or an int K >= 1; "
                 f"got {self.schedule!r}")
+        if self.overlap not in ("auto", True, False):
+            raise ValueError(
+                f"overlap must be 'auto', True or False; "
+                f"got {self.overlap!r}")
         if not (self.hier is None or self.hier == "auto"
                 or (isinstance(self.hier, tuple) and len(self.hier) == 2)):
             raise ValueError(
@@ -234,6 +252,9 @@ class DistSpmm:
         self.mesh = mesh
         self.axis_kwargs = dict(axis_kwargs)
         self.decisions = dict(decisions)
+        # autotuned execution mode: round-pipelined vs staged (decided in
+        # compile_spmm, rides through save/load inside ``decisions``)
+        self.overlap = bool(self.decisions.get("overlap", False))
         self.default_backend = (config.default_backend
                                 or config.backend_names()[0])
         if self.default_backend not in self.ex.backends:
@@ -273,9 +294,9 @@ class DistSpmm:
         """The traceable executor path (used under jit and for lowering)."""
         if self.hier is not None:
             return hier_spmm(self.ex, b, self.mesh, backend=backend,
-                             **self.axis_kwargs)
+                             overlap=self.overlap, **self.axis_kwargs)
         return flat_spmm(self.ex, b, self.mesh, backend=backend,
-                         **self.axis_kwargs)
+                         overlap=self.overlap, **self.axis_kwargs)
 
     def _executable(self, n_cols: int, dtype, backend: str):
         key = (int(n_cols), jnp.dtype(dtype).name, backend)
@@ -330,6 +351,7 @@ class DistSpmm:
             default_backend=self.default_backend,
             schedule_kind=sched.kind,
             schedule_K=sched.K if sched.kind == "bucketed" else 1,
+            overlap=self.overlap,
             volume_rows=plan.volume_rows(),
             volume_rows_padded=sched.volume_rows_padded(),
             cache=self.cache_info(),
@@ -348,7 +370,8 @@ class DistSpmm:
                 if self.hier is not None else "flat")
         return (f"DistSpmm({self.plan.shape[0]}x{self.plan.shape[1]}, "
                 f"P={self.plan.P}, {tier}, schedule={sched.kind}"
-                f"{f'/K={sched.K}' if sched.kind == 'bucketed' else ''}, "
+                f"{f'/K={sched.K}' if sched.kind == 'bucketed' else ''}"
+                f"{', overlapped' if self.overlap else ''}, "
                 f"backends={self.backends})")
 
     # ----- serialization ----------------------------------------------
@@ -408,15 +431,18 @@ def _materialize(config: SpmmConfig, plan: SpmmPlan,
                  decisions: Dict[str, Any], mesh: Union[Mesh, int]
                  ) -> DistSpmm:
     """Deterministic device-side prep: exec arrays + mesh + handle."""
+    # only materialize the per-round consumable layouts when the
+    # autotuned decision actually executes overlapped
+    overlap = bool(decisions.get("overlap", False))
     if hier is not None:
         m, ga, la = _hier_mesh(mesh, hier.G, hier.L)
         ex = hier_exec_arrays(hier, backends=config.backends,
-                              schedule=schedule)
+                              schedule=schedule, overlap_layouts=overlap)
         axis_kwargs = {"group_axis": ga, "local_axis": la}
     else:
         m, ax = _flat_mesh(mesh)
         ex = flat_exec_arrays(plan, backends=config.backends,
-                              schedule=schedule)
+                              schedule=schedule, overlap_layouts=overlap)
         axis_kwargs = {"axis": ax}
     return DistSpmm(config=config, plan=plan, hier=hier, schedule=schedule,
                     ex=ex, mesh=m, axis_kwargs=axis_kwargs,
@@ -463,31 +489,52 @@ def compile_spmm(a: CSRMatrix, mesh: Union[Mesh, int],
                     t_hier < decisions["modeled_time_flat"]:
                 hier = cand
 
-    # ----- communication schedule -------------------------------------
+    # ----- communication schedule + execution mode --------------------
+    # The "auto" schedule sweep co-optimizes K with the execution mode
+    # (overlap hides padded bytes behind segment compute, shifting which
+    # K wins); explicit schedules still get the mode decision below.
     if hier is not None:
         if config.schedule == "single":
             schedule = single_round_hier_schedule(hier)
         elif isinstance(config.schedule, int):
             schedule = build_hier_comm_schedule(hier, K=config.schedule)
-        else:  # auto
-            schedule, t = choose_hier_schedule(hier, n_hint, net,
+        elif config.overlap is False:
+            schedule, _ = choose_hier_schedule(hier, n_hint, net,
                                                k_max=config.k_max)
-            decisions["modeled_time_schedule"] = t
-        if "modeled_time_schedule" not in decisions:
-            decisions["modeled_time_schedule"] = modeled_time_hier_schedule(
-                schedule, n_hint, net)
+        else:
+            schedule, _, _ = choose_hier_schedule(hier, n_hint, net,
+                                                  k_max=config.k_max,
+                                                  overlap=config.overlap)
+        decisions["modeled_time_schedule"] = modeled_time_hier_schedule(
+            schedule, n_hint, net)
+        t_staged = modeled_time_hier_staged(hier, schedule, n_hint, net)
+        t_overlap = modeled_time_hier_overlap(hier, schedule, n_hint, net)
     else:
         if config.schedule == "single":
             schedule = single_round_schedule(plan)
         elif isinstance(config.schedule, int):
             schedule = build_comm_schedule(plan, K=config.schedule)
-        else:  # auto
-            schedule, t = choose_schedule(plan, n_hint, net,
+        elif config.overlap is False:
+            schedule, _ = choose_schedule(plan, n_hint, net,
                                           k_max=config.k_max)
-            decisions["modeled_time_schedule"] = t
-        if "modeled_time_schedule" not in decisions:
-            decisions["modeled_time_schedule"] = modeled_time_schedule(
-                plan, schedule, n_hint, net)
+        else:
+            schedule, _, _ = choose_schedule(plan, n_hint, net,
+                                             k_max=config.k_max,
+                                             overlap=config.overlap)
+        decisions["modeled_time_schedule"] = modeled_time_schedule(
+            plan, schedule, n_hint, net)
+        t_staged = modeled_time_staged(plan, schedule, n_hint, net)
+        t_overlap = modeled_time_overlap(plan, schedule, n_hint, net)
+
+    decisions["modeled_time_staged"] = t_staged
+    decisions["modeled_time_overlap"] = t_overlap
+    use_overlap = False
+    if schedule.kind == "bucketed":
+        if config.overlap is True:
+            use_overlap = True
+        elif config.overlap == "auto":
+            use_overlap = t_overlap < t_staged
+    decisions["overlap"] = use_overlap
 
     return _materialize(config, plan, hier, schedule, decisions, mesh)
 

@@ -13,7 +13,7 @@ schedule winning when the cliff is small; the model reproduces that too).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Tuple, Union
 
 import numpy as np
 
@@ -34,8 +34,12 @@ __all__ = [
     "modeled_time",
     "modeled_time_hier",
     "modeled_time_schedule",
+    "modeled_time_staged",
+    "modeled_time_overlap",
     "choose_schedule",
     "modeled_time_hier_schedule",
+    "modeled_time_hier_staged",
+    "modeled_time_hier_overlap",
     "choose_hier_schedule",
     "balance_stats",
 ]
@@ -172,27 +176,98 @@ def _tier(net: NetworkSpec, P: int) -> Tuple[float, float]:
     return net.bw_inter, net.lat_inter
 
 
-def _schedule_alpha_beta_time(sched: CommSchedule, unit: float, bw: float,
-                              lat: float) -> float:
-    """α-β time of one schedule realization on a fixed (bw, lat) tier.
+def _round_comm_times(sched: CommSchedule, unit: float, bw: float,
+                      lat: float) -> list:
+    """Per-round α-β comm seconds, one entry per ``sched.rounds``.
 
-    ``single``: two max-padded all_to_alls — the per-process operand rows
-    behind 2 α terms (one per part). ``bucketed``: each round is charged
-    one α per PART it carries traffic on (the B exchange and the C
-    exchange are separate program phases; a round's shift permutes within
-    one phase are disjoint matchings and overlap), plus the round's
-    padded per-process bytes.
+    Each round is charged one α per PART it carries traffic on (the B
+    exchange and the C exchange are separate program phases; a round's
+    shift permutes within one phase are disjoint matchings and overlap),
+    plus the round's padded per-process bytes. The SINGLE source of the
+    per-round comm term: the staged sum and the overlap per-round max
+    must charge identically or ``overlap ≤ staged`` (and the autotuner's
+    mode decision) silently breaks.
     """
-    if sched.kind == "single":
-        return 2 * lat + sched.rows_per_process() * unit / bw
-    t = 0.0
+    out = []
     for rnd in sched.rounds:
         rows = sum(sched.slots_b[d - 1] + sched.slots_c[d - 1]
                    for d in rnd.shifts)
         phases = (any(sched.slots_b[d - 1] > 0 for d in rnd.shifts)
                   + any(sched.slots_c[d - 1] > 0 for d in rnd.shifts))
-        t += phases * lat + rows * unit / bw
-    return t
+        out.append(phases * lat + rows * unit / bw)
+    return out
+
+
+def _schedule_alpha_beta_time(sched: CommSchedule, unit: float, bw: float,
+                              lat: float) -> float:
+    """α-β time of one schedule realization on a fixed (bw, lat) tier.
+
+    ``single``: two max-padded all_to_alls — the per-process operand rows
+    behind 2 α terms (one per part). ``bucketed``: the serialized sum of
+    the per-round terms (``_round_comm_times``).
+    """
+    if sched.kind == "single":
+        return 2 * lat + sched.rows_per_process() * unit / bw
+    return sum(_round_comm_times(sched, unit, bw, lat))
+
+
+# ---------------------------------------------------------------------------
+# per-round segment compute (the work an overlapped round hides wire behind)
+# ---------------------------------------------------------------------------
+
+
+def _shift_compute_nnz(plan: SpmmPlan) -> np.ndarray:
+    """[P, P-1] nonzeros each process computes for shift d = 1..P-1.
+
+    Shift ``d``'s segment compute at process ``p`` is the column-covered
+    nonzeros it multiplies against the received B segment (pair
+    ``(p, (p-d)%P)``'s a_col) plus the row-covered nonzeros it computes
+    into the partial-C send segment (pair ``((p+d)%P, p)``'s a_row).
+    """
+    P = plan.P
+    nnz = np.zeros((P, P - 1), np.int64)
+    for (p, q), pp in plan.pair_plans.items():
+        d = (p - q) % P
+        nnz[p, d - 1] += pp.a_col.nnz
+        nnz[q, d - 1] += pp.a_row.nnz
+    return nnz
+
+
+def _round_flops(nnz: np.ndarray, sched: CommSchedule,
+                 n_dense: int) -> List[float]:
+    """Per-round segment flops (critical path: max over processes)."""
+    if sched.kind == "single":
+        return [float(nnz.sum(axis=1).max()) * 2.0 * n_dense]
+    out = []
+    for rnd in sched.rounds:
+        per_proc = nnz[:, [d - 1 for d in rnd.shifts]].sum(axis=1)
+        out.append(float(per_proc.max()) * 2.0 * n_dense)
+    return out
+
+
+def _group_shift_compute_nnz(hier: HierPlan) -> np.ndarray:
+    """[P, G] nonzeros each process computes per group shift (0 = own)."""
+    base, G, L = hier.base, hier.G, hier.L
+    P = base.P
+    nnz = np.zeros((P, G), np.int64)
+    for (p, q), pp in base.pair_plans.items():
+        dg = (p // L - q // L) % G
+        nnz[p, dg] += pp.a_col.nnz
+        nnz[q, dg] += pp.a_row.nnz
+    return nnz
+
+
+def _hier_round_flops(nnz: np.ndarray, sched: CommSchedule,
+                      n_dense: int) -> Tuple[float, List[float]]:
+    """(own-group flops, per-round flops) for a hier inter-group schedule."""
+    local = float(nnz[:, 0].max()) * 2.0 * n_dense
+    if sched.kind == "single":
+        return local, [float(nnz[:, 1:].sum(axis=1).max()) * 2.0 * n_dense]
+    rounds = []
+    for rnd in sched.rounds:
+        per_proc = nnz[:, list(rnd.shifts)].sum(axis=1)
+        rounds.append(float(per_proc.max()) * 2.0 * n_dense)
+    return local, rounds
 
 
 def modeled_time_schedule(
@@ -214,25 +289,104 @@ def modeled_time_schedule(
     return _schedule_alpha_beta_time(sched, n_dense * sz_dt, bw, lat)
 
 
+def modeled_time_staged(
+    plan: SpmmPlan,
+    sched: CommSchedule,
+    n_dense: int,
+    net: NetworkSpec,
+    sz_dt: int = 4,
+    flop_rate: float = 1e12,
+) -> float:
+    """Serialized rounds: every round's wire, THEN every segment compute.
+
+    The comm+comp SUM the staged executor realizes (diagonal-block
+    compute is common to both execution modes and excluded from both, so
+    staged-vs-overlap comparisons are offset-free).
+    """
+    comp = sum(_round_flops(_shift_compute_nnz(plan), sched, n_dense))
+    return (modeled_time_schedule(plan, sched, n_dense, net, sz_dt)
+            + comp / flop_rate)
+
+
+def modeled_time_overlap(
+    plan: SpmmPlan,
+    sched: CommSchedule,
+    n_dense: int,
+    net: NetworkSpec,
+    sz_dt: int = 4,
+    flop_rate: float = 1e12,
+) -> float:
+    """Round-pipelined time: ``Σ_k max(α_k + bytes_k/β, γ·flops_k)``.
+
+    Each bucketed round's wire hides behind (or is hidden by) its own
+    segment compute instead of serializing — the dataflow the
+    ``overlap=True`` executors expose to XLA's async collective
+    scheduler. Never worse than ``modeled_time_staged`` of the same
+    schedule (``max ≤ sum`` per round); the single round degenerates to
+    ``max(comm, comp)`` — the whole-program overlap ``modeled_time``
+    already assumed.
+    """
+    unit = n_dense * sz_dt
+    bw, lat = _tier(net, plan.P)
+    flops = _round_flops(_shift_compute_nnz(plan), sched, n_dense)
+    if sched.kind == "single":
+        comm = 2 * lat + sched.rows_per_process() * unit / bw
+        return max(comm, flops[0] / flop_rate)
+    return sum(max(comm, f / flop_rate)
+               for comm, f in zip(_round_comm_times(sched, unit, bw, lat),
+                                  flops))
+
+
 def choose_schedule(
     plan: SpmmPlan,
     n_dense: int,
     net: NetworkSpec,
     k_max: int = 4,
     sz_dt: int = 4,
-) -> Tuple[CommSchedule, float]:
+    overlap: Union[bool, str] = False,
+    flop_rate: float = 1e12,
+):
     """Pick the fastest schedule realization under the α-β model.
 
     Candidates: the single max-padded all_to_all round and bucketed
-    schedules for K = 1..k_max slot classes. Returns (schedule,
-    modeled_seconds). On balanced patterns the single round usually wins
-    (fewer α terms, no padding to shave); on skewed patterns a small K
-    already removes most padded bytes — mirroring the paper's flat-vs-
-    hier discussion (§7.7) one level down.
+    schedules for K = 1..k_max slot classes. On balanced patterns the
+    single round usually wins (fewer α terms, no padding to shave); on
+    skewed patterns a small K already removes most padded bytes —
+    mirroring the paper's flat-vs-hier discussion (§7.7) one level down.
+
+    ``overlap`` grows the sweep's execution-mode axis:
+
+    * ``False`` (default) — communication-only scoring, returns
+      ``(schedule, modeled_seconds)`` exactly as before.
+    * ``"auto"`` — every candidate is scored at BOTH execution modes
+      (``modeled_time_staged`` vs ``modeled_time_overlap``; the single
+      round has no rounds to pipeline and is staged-only). Returns
+      ``(schedule, modeled_seconds, use_overlap)``.
+    * ``True`` — bucketed candidates are scored overlapped only (the
+      caller forces overlap); same 3-tuple return.
+
+    Overlap changes which K wins: pipelining hides padded bytes behind
+    segment compute, so compute-rich problems tolerate finer (larger-K)
+    bucketing than a comm-only model would pick.
     """
     single = single_round_schedule(plan)
-    best: Tuple[CommSchedule, float] = (
-        single, modeled_time_schedule(plan, single, n_dense, net, sz_dt))
+    if overlap is False:
+        best: Tuple[CommSchedule, float] = (
+            single, modeled_time_schedule(plan, single, n_dense, net, sz_dt))
+        seen = set()
+        for K in range(1, max(1, k_max) + 1):
+            sched = build_comm_schedule(plan, K=K)
+            key = (sched.slots_b, sched.slots_c)
+            if key in seen:
+                continue
+            seen.add(key)
+            t = modeled_time_schedule(plan, sched, n_dense, net, sz_dt)
+            if t < best[1]:
+                best = (sched, t)
+        return best
+
+    best3 = (single, modeled_time_staged(plan, single, n_dense, net, sz_dt,
+                                         flop_rate), False)
     seen = set()
     for K in range(1, max(1, k_max) + 1):
         sched = build_comm_schedule(plan, K=K)
@@ -240,10 +394,16 @@ def choose_schedule(
         if key in seen:
             continue
         seen.add(key)
-        t = modeled_time_schedule(plan, sched, n_dense, net, sz_dt)
-        if t < best[1]:
-            best = (sched, t)
-    return best
+        t_ovl = modeled_time_overlap(plan, sched, n_dense, net, sz_dt,
+                                     flop_rate)
+        cands = [(t_ovl, True)]
+        if overlap is not True:  # "auto" also admits staged execution
+            cands.append((modeled_time_staged(plan, sched, n_dense, net,
+                                              sz_dt, flop_rate), False))
+        for t, use in cands:
+            if t < best3[1]:
+                best3 = (sched, t, use)
+    return best3
 
 
 def modeled_time_hier_schedule(
@@ -264,22 +424,86 @@ def modeled_time_hier_schedule(
                                      net.bw_inter, net.lat_inter)
 
 
+def modeled_time_hier_staged(
+    hier: HierPlan,
+    sched: CommSchedule,
+    n_dense: int,
+    net: NetworkSpec,
+    sz_dt: int = 4,
+    flop_rate: float = 1e12,
+) -> float:
+    """Serialized inter-group rounds + every off-diagonal segment compute."""
+    local, rounds = _hier_round_flops(_group_shift_compute_nnz(hier),
+                                      sched, n_dense)
+    return (modeled_time_hier_schedule(sched, n_dense, net, sz_dt)
+            + (local + sum(rounds)) / flop_rate)
+
+
+def modeled_time_hier_overlap(
+    hier: HierPlan,
+    sched: CommSchedule,
+    n_dense: int,
+    net: NetworkSpec,
+    sz_dt: int = 4,
+    flop_rate: float = 1e12,
+) -> float:
+    """Round-pipelined hier time: own-group compute + Σ_k max(comm, comp).
+
+    The shift-0 (own group) segment never touches the inter-group wire;
+    its compute overlaps the first in-flight round in the executor but is
+    charged additively here so overlapped and staged share accounting
+    (the same term appears in ``modeled_time_hier_staged``, keeping
+    ``overlap ≤ staged`` exact).
+    """
+    unit = n_dense * sz_dt
+    bw, lat = net.bw_inter, net.lat_inter
+    local, flops = _hier_round_flops(_group_shift_compute_nnz(hier),
+                                     sched, n_dense)
+    if sched.kind == "single":
+        comm = 2 * lat + sched.rows_per_process() * unit / bw
+        return local / flop_rate + max(comm, flops[0] / flop_rate)
+    return local / flop_rate + sum(
+        max(comm, f / flop_rate)
+        for comm, f in zip(_round_comm_times(sched, unit, bw, lat), flops))
+
+
 def choose_hier_schedule(
     hier: HierPlan,
     n_dense: int,
     net: NetworkSpec,
     k_max: int = 4,
     sz_dt: int = 4,
-) -> Tuple[CommSchedule, float]:
+    overlap: Union[bool, str] = False,
+    flop_rate: float = 1e12,
+):
     """Pick the fastest hierarchical inter-group schedule realization.
 
     Mirrors ``choose_schedule`` one tier up: candidates are the single
     max-padded all_to_all pair and bucketed group-shift schedules for
-    K = 1..k_max. Returns (schedule, modeled_seconds).
+    K = 1..k_max. ``overlap`` grows the same execution-mode axis as
+    ``choose_schedule`` — ``False`` keeps the comm-only 2-tuple return,
+    ``"auto"``/``True`` score staged-vs-overlapped totals and return
+    ``(schedule, modeled_seconds, use_overlap)``.
     """
     single = single_round_hier_schedule(hier)
-    best: Tuple[CommSchedule, float] = (
-        single, modeled_time_hier_schedule(single, n_dense, net, sz_dt))
+    if overlap is False:
+        best: Tuple[CommSchedule, float] = (
+            single, modeled_time_hier_schedule(single, n_dense, net, sz_dt))
+        seen = set()
+        for K in range(1, max(1, k_max) + 1):
+            sched = build_hier_comm_schedule(hier, K=K)
+            key = (sched.slots_b, sched.slots_c,
+                   sched.local_slot_b, sched.local_slot_c)
+            if key in seen:
+                continue
+            seen.add(key)
+            t = modeled_time_hier_schedule(sched, n_dense, net, sz_dt)
+            if t < best[1]:
+                best = (sched, t)
+        return best
+
+    best3 = (single, modeled_time_hier_staged(hier, single, n_dense, net,
+                                              sz_dt, flop_rate), False)
     seen = set()
     for K in range(1, max(1, k_max) + 1):
         sched = build_hier_comm_schedule(hier, K=K)
@@ -288,10 +512,16 @@ def choose_hier_schedule(
         if key in seen:
             continue
         seen.add(key)
-        t = modeled_time_hier_schedule(sched, n_dense, net, sz_dt)
-        if t < best[1]:
-            best = (sched, t)
-    return best
+        t_ovl = modeled_time_hier_overlap(hier, sched, n_dense, net, sz_dt,
+                                          flop_rate)
+        cands = [(t_ovl, True)]
+        if overlap is not True:
+            cands.append((modeled_time_hier_staged(hier, sched, n_dense, net,
+                                                   sz_dt, flop_rate), False))
+        for t, use in cands:
+            if t < best3[1]:
+                best3 = (sched, t, use)
+    return best3
 
 
 def balance_stats(plan: SpmmPlan) -> Dict[str, float]:

@@ -39,7 +39,7 @@ served by a local slice instead of a collective.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -56,6 +56,8 @@ __all__ = [
     "build_hier_comm_schedule",
     "flat_schedule_layout",
     "hier_schedule_layout",
+    "ordered_spans",
+    "span_cuts",
 ]
 
 
@@ -328,6 +330,31 @@ __all__ += ["single_round_schedule", "single_round_hier_schedule"]
 # ---------------------------------------------------------------------------
 
 
+def ordered_spans(off: Dict[int, Tuple[int, int]]
+                  ) -> Tuple[Tuple[int, int, int], ...]:
+    """``((shift, offset, slot), ...)`` sorted by offset.
+
+    The order every consumer must agree on: the executors exchange and
+    consume segments in ascending-offset order, the per-segment
+    backend layouts are cut at the same boundaries, and the staged
+    paths' flat receive spaces concatenate segments the same way — so
+    round-pipelined (overlapped) execution accumulates partial C in
+    exactly the order the staged compute does.
+    """
+    return tuple(sorted(((d, o, s) for d, (o, s) in off.items()),
+                        key=lambda t: t[1]))
+
+
+def span_cuts(spans: Sequence[Tuple[int, int, int]]) -> Tuple[int, ...]:
+    """Cumulative end offsets of ``ordered_spans`` output (one per span).
+
+    ``cuts[i]`` is the first index NOT covered after consuming spans
+    0..i — the column cut points handed to
+    ``LocalSpmmBackend.prepare_segments``.
+    """
+    return tuple(o + s for _, o, s in spans)
+
+
 def _segment_offsets(slots: Sequence[int], lead: int = 0
                      ) -> Tuple[Dict[int, Tuple[int, int]], int]:
     """{shift: (offset, slot)} over the concatenated per-shift segments.
@@ -372,7 +399,7 @@ class FlatScheduleLayout:
 def flat_schedule_layout(plan: SpmmPlan, sched: CommSchedule
                          ) -> FlatScheduleLayout:
     """Materialize send maps + remapped pieces for a bucketed flat plan."""
-    from .sparse import COOMatrix, CSRMatrix, csr_from_coo
+    from .sparse import COOMatrix, csr_from_coo
 
     if sched.kind != "bucketed":
         raise ValueError("flat_schedule_layout needs a bucketed schedule")
@@ -448,8 +475,16 @@ class HierScheduleLayout:
       b_send_idx [P, R_bg]      — local B row per send slot (group-shift
                                   segments, -1 pad);
       c_recv_rows [P, R_cg]     — dest-local C row per receive slot;
-      colp                      — columns remapped to the post-all_gather
-                                  space (l_src · R_bg + off_bg[dg] + slot);
+      colp                      — columns remapped to the SEGMENT-MAJOR
+                                  post-all_gather space: group shift dg
+                                  owns the contiguous range
+                                  [L·off_bg[dg], L·(off_bg[dg]+slot_dg))
+                                  at inner index l_src·slot_dg + slot, so
+                                  each gathered segment is consumable the
+                                  moment it lands — the overlapped
+                                  executor accumulates per segment and
+                                  the staged executor concatenates the
+                                  same ranges in the same order;
       rowp                      — the intra-group psum_scatter keeps its
                                   uniform max_cg slot layout, but rows
                                   are re-keyed SHIFT-major,
@@ -517,11 +552,13 @@ def hier_schedule_layout(hier: HierPlan, sched: CommSchedule
 
     pieces = hier_piece_csrs(hier)
 
-    # colp: hier gathered col ((ls·G + gs)·max_bg + slot) ->
-    #       ls·R_bg + off_bg[(gd_dest - gs) % G] + slot
+    # colp: hier gathered col ((ls·G + gs)·max_bg + slot) -> segment-major
+    #       L·off_bg[dg] + ls·slot_dg + slot, with dg = (gd_dest - gs) % G
     goff = np.full(G, -1, np.int64)
-    for dg, (off, _) in off_bg.items():
+    gwidth = np.zeros(G, np.int64)
+    for dg, (off, sl) in off_bg.items():
         goff[dg] = off
+        gwidth[dg] = sl
     colp: List = []
     for p in range(P):
         gd = p // L
@@ -531,7 +568,8 @@ def hier_schedule_layout(hier: HierPlan, sched: CommSchedule
         lg = flat // hier.max_bg
         slots = flat % hier.max_bg
         ls, gs = lg // G, lg % G
-        new_cols = ls * R_bg + goff[(gd - gs) % G] + slots
+        dg = (gd - gs) % G
+        new_cols = L * goff[dg] + ls * gwidth[dg] + slots
         assert csr.nnz == 0 or new_cols.min() >= 0
         colp.append(csr_from_coo(COOMatrix(
             (csr.shape[0], L * R_bg), coo.row,

@@ -36,6 +36,21 @@ The send-buffer pack and the received-partials aggregation go through
 Pallas gather / sorted-scatter kernels on TPU (interpret mode when
 ``REPRO_PALLAS_INTERPRET=1``), the pure-jnp oracles elsewhere — all
 numerically interchangeable.
+
+Execution is staged or ROUND-PIPELINED (``overlap=True``): bucketed
+plans carry per-round consumable layouts (segment colp/rowp pieces +
+per-round aggregation maps, prepared host-side), and the overlapped
+bodies consume each round's received slab the moment it lands — segment
+compute depends only on its own collective-permute, so XLA's async
+collective scheduling hides round k+1's wire behind round k's MXU/VPU
+work. The hierarchical overlap additionally interleaves the Stage I
+inter-group B fetch with shift-0 own-group compute and departs each
+group shift's C transfer straight out of its own reduce-scatter (paper
+Alg. 1 / Fig. 6(f)). Overlap changes only WHEN work executes: the
+collective-permute operands are identical to the staged schedule's, and
+C is bit-identical (the per-round accumulation replays the staged
+per-element addition chains exactly — see core.local_backend's
+cumulative-prefix contract).
 """
 from __future__ import annotations
 
@@ -52,12 +67,13 @@ from ..kernels.ops import (
     pack_rows_op, prepare_sorted_scatter, scatter_add_rows_exec_op,
 )
 from .comm_schedule import (
-    CommSchedule, flat_schedule_layout, hier_schedule_layout,
-    single_round_hier_schedule, single_round_schedule,
+    CommSchedule, flat_schedule_layout, hier_schedule_layout, ordered_spans,
+    single_round_hier_schedule, single_round_schedule, span_cuts,
 )
 from .hierarchy import HierPlan, hier_piece_csrs
 from .local_backend import (
-    LocalSpmmBackend, coo_spmm_local, get_backend,
+    LocalSpmmBackend, backend_compute_segment, backend_prepare_segments,
+    coo_spmm_local, get_backend,
 )
 from .planner import SpmmPlan, local_piece_csrs
 
@@ -158,7 +174,11 @@ class FlatExecPlan(_ExecPlanBase):
     [P, P, max_b] / [P, P, max_c] for the single all_to_all round,
     [P, R_b] / [P, R_c] flat segment spaces for a bucketed schedule.
     ``agg_perm`` / ``agg_meta`` are the host-prepared sorted-scatter maps
-    consumed by the Pallas aggregation kernel.
+    consumed by the Pallas aggregation kernel. Bucketed plans additionally
+    carry per-round consumables: ``pieces[backend]["colp@i"]`` /
+    ``["rowp@i"]`` (segment layouts for round-pipelined compute, see
+    ``local_backend.backend_prepare_segments``) and ``seg_agg``
+    (``perm@i`` / ``meta@i`` per-round sorted-scatter maps).
     """
 
     pieces: Dict[str, Pieces]
@@ -166,6 +186,7 @@ class FlatExecPlan(_ExecPlanBase):
     c_recv_rows: jax.Array  # int32, -1 pad
     agg_perm: jax.Array  # [P, S] int32
     agg_meta: jax.Array  # [P, S+1] int32
+    seg_agg: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
     meta: dict = dataclasses.field(metadata=dict(static=True), default_factory=dict)
 
     @property
@@ -196,6 +217,7 @@ class HierExecPlan(_ExecPlanBase):
     c_recv_rows: jax.Array
     agg_perm: jax.Array
     agg_meta: jax.Array
+    seg_agg: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
     meta: dict = dataclasses.field(metadata=dict(static=True), default_factory=dict)
 
     @property
@@ -237,7 +259,8 @@ def _segments_static(off: Dict[int, Tuple[int, int]],
 
 def flat_exec_arrays(plan: SpmmPlan,
                      backends: Sequence[BackendSpec] = ("coo",),
-                     schedule: Optional[CommSchedule] = None
+                     schedule: Optional[CommSchedule] = None,
+                     overlap_layouts: bool = True
                      ) -> FlatExecPlan:
     """Convert an offline SpmmPlan into stacked device arrays.
 
@@ -248,6 +271,10 @@ def flat_exec_arrays(plan: SpmmPlan,
     per part; a bucketed CommSchedule (core.comm_schedule.
     build_comm_schedule) switches to per-shift ppermute rounds and
     re-lays the colp/rowp pieces into the bucketed index spaces.
+    ``overlap_layouts=False`` skips the per-round consumables (a second
+    copy of the colp/rowp layouts per backend + per-round scatter maps)
+    when the caller knows execution stays staged — ``compile_spmm``
+    passes its autotuned decision here.
     """
     m_local = _uniform_m_local(plan.bounds)
     if schedule is None or schedule.kind == "single":
@@ -273,31 +300,57 @@ def flat_exec_arrays(plan: SpmmPlan,
                   "rowp": layout.rowp}
     pieces, resolved = _prepare_pieces(piece_csrs, backends)
     perm, meta_arr = _stack_sorted_scatter(layout.c_recv_rows)
+
+    # per-round consumables for the overlapped executor: segment colp
+    # layouts over the cumulative receive prefix, per-round rowp row
+    # slices, and per-round aggregation maps
+    b_spans = ordered_spans(layout.off_b)
+    c_spans = ordered_spans(layout.off_c)
+    seg_agg: Dict[str, jax.Array] = {}
+    if overlap_layouts:
+        for name, be in resolved.items():
+            for i, seg in enumerate(
+                    backend_prepare_segments(be, layout.colp,
+                                             span_cuts(b_spans))):
+                pieces[name][f"colp@{i}"] = seg
+            for i, (_, off, slot) in enumerate(c_spans):
+                pieces[name][f"rowp@{i}"] = be.prepare(
+                    [csr.row_block(off, off + slot) for csr in layout.rowp])
+        for i, (_, off, slot) in enumerate(c_spans):
+            sp, sm = _stack_sorted_scatter(
+                layout.c_recv_rows[:, off:off + slot])
+            seg_agg[f"perm@{i}"] = jnp.asarray(sp)
+            seg_agg[f"meta@{i}"] = jnp.asarray(sm)
+
     return FlatExecPlan(
         pieces=pieces,
         b_send_idx=jnp.asarray(layout.b_send_idx),
         c_recv_rows=jnp.asarray(layout.c_recv_rows),
         agg_perm=jnp.asarray(perm),
         agg_meta=jnp.asarray(meta_arr),
+        seg_agg=seg_agg,
         meta=dict(P=plan.P, max_b=plan.max_b, max_c=plan.max_c,
                   m_local=m_local, backends=resolved,
                   default_backend=next(iter(resolved)),
                   schedule=schedule,
-                  b_segments=_segments_static(layout.off_b),
-                  c_segments=_segments_static(layout.off_c),
+                  b_segments=b_spans,
+                  c_segments=c_spans,
+                  overlap_ready=overlap_layouts,
                   R_b=layout.R_b, R_c=layout.R_c),
     )
 
 
 def hier_exec_arrays(hier: HierPlan,
                      backends: Sequence[BackendSpec] = ("coo",),
-                     schedule: Optional[CommSchedule] = None
+                     schedule: Optional[CommSchedule] = None,
+                     overlap_layouts: bool = True
                      ) -> HierExecPlan:
     """Convert a HierPlan into stacked device arrays for the (g,l) mesh.
 
     ``schedule`` buckets the INTER-GROUP collectives (see
     core.comm_schedule.build_hier_comm_schedule); the intra-group
     psum_scatter / all_gather keep their uniform layouts either way.
+    ``overlap_layouts`` as in ``flat_exec_arrays``.
     """
     base = hier.base
     G, L = hier.G, hier.L
@@ -329,9 +382,30 @@ def hier_exec_arrays(hier: HierPlan,
     piece_csrs = {"diag": list(base.a_diag), "colp": layout.colp,
                   "rowp": layout.rowp}
     pieces, resolved = _prepare_pieces(piece_csrs, backends)
+
+    # per-round consumables over the SEGMENT-MAJOR gathered space (the
+    # shift-0 own-group segment is ordinal 0 when present): colp segment
+    # layouts cut at the gathered cumulative boundaries, and per-round
+    # aggregation maps over the inter-group C receive segments
+    bg_all = ordered_spans(layout.off_bg)
+    cg_all = ordered_spans(layout.off_cg)
+    if overlap_layouts:
+        gathered_cuts = tuple(L * (off + slot) for _, off, slot in bg_all)
+        for name, be in resolved.items():
+            for i, seg in enumerate(
+                    backend_prepare_segments(be, layout.colp,
+                                             gathered_cuts)):
+                pieces[name][f"colp@{i}"] = seg
     pieces = jax.tree_util.tree_map(
         lambda x: x.reshape((G, L) + x.shape[1:]), pieces)
     perm, meta_arr = _stack_sorted_scatter(layout.c_recv_rows)
+    seg_agg: Dict[str, jax.Array] = {}
+    if overlap_layouts:
+        for i, (_, off, slot) in enumerate(cg_all):
+            sp, sm = _stack_sorted_scatter(
+                layout.c_recv_rows[:, off:off + slot])
+            seg_agg[f"perm@{i}"] = jnp.asarray(sp.reshape(G, L, -1))
+            seg_agg[f"meta@{i}"] = jnp.asarray(sm.reshape(G, L, -1))
     local_b = layout.off_bg.get(0)
     local_c = layout.off_cg.get(0)
     return HierExecPlan(
@@ -342,12 +416,15 @@ def hier_exec_arrays(hier: HierPlan,
             layout.c_recv_rows.reshape(G, L, layout.R_cg)),
         agg_perm=jnp.asarray(perm.reshape(G, L, -1)),
         agg_meta=jnp.asarray(meta_arr.reshape(G, L, -1)),
+        seg_agg=seg_agg,
         meta=dict(G=G, L=L, max_bg=hier.max_bg, max_cg=hier.max_cg,
                   m_local=m_local, backends=resolved,
                   default_backend=next(iter(resolved)),
                   schedule=schedule,
                   bg_segments=_segments_static(layout.off_bg),
                   cg_segments=_segments_static(layout.off_cg),
+                  bg_all=bg_all, cg_all=cg_all,
+                  overlap_ready=overlap_layouts,
                   local_b=local_b, local_c=local_c,
                   R_bg=layout.R_bg, R_cg=layout.R_cg),
     )
@@ -404,15 +481,21 @@ def _slice_fetch(buf: jax.Array):
 
 def flat_spmm(plan: FlatExecPlan, b_global: jax.Array, mesh: Mesh,
               axis: str = "x",
-              backend: Optional[BackendSpec] = None) -> jax.Array:
+              backend: Optional[BackendSpec] = None,
+              overlap: bool = False) -> jax.Array:
     """Execute ``C = A @ B`` with the flat SHIRO schedule on ``mesh[axis]``.
 
     ``b_global``: [K, N] dense matrix, row-sharded over ``axis``.
     ``backend`` selects the local-compute substrate among the layouts the
     plan was built with (default: the plan's first backend). The
     communication realization (single all_to_all round vs bucketed
-    ppermute rounds) was fixed at ``flat_exec_arrays`` time. Returns C
-    [M, N] row-sharded the same way.
+    ppermute rounds) was fixed at ``flat_exec_arrays`` time.
+    ``overlap=True`` switches a bucketed plan to the round-pipelined
+    executor: identical collective-permutes, bit-identical C, but each
+    round's segment compute depends only on its own permute so the
+    compiler can hide round k+1's wire behind round k's work (single-
+    round plans have no rounds to pipeline and fall back to staged).
+    Returns C [M, N] row-sharded the same way.
     """
     m_local = plan.meta["m_local"]
     P_ = plan.P
@@ -420,7 +503,8 @@ def flat_spmm(plan: FlatExecPlan, b_global: jax.Array, mesh: Mesh,
     sched = plan.schedule
 
     if sched.kind == "single":
-        def body(pieces, b_send_idx, c_recv_rows, agg_perm, agg_meta, b_loc):
+        def body(pieces, b_send_idx, c_recv_rows, agg_perm, agg_meta,
+                 seg_agg, b_loc):
             pieces = jax.tree_util.tree_map(lambda x: x[0], pieces)
             b_send_idx = b_send_idx[0]
             c_recv_rows = c_recv_rows[0]
@@ -447,12 +531,13 @@ def flat_spmm(plan: FlatExecPlan, b_global: jax.Array, mesh: Mesh,
             return scatter_add_rows_exec_op(
                 c, recv_c.reshape(P_ * plan.max_c, n),
                 c_recv_rows.reshape(-1), agg_perm, agg_meta)
-    else:
+    elif not overlap:
         b_segments: Segments = plan.meta["b_segments"]
         c_segments: Segments = plan.meta["c_segments"]
         R_b, R_c = plan.meta["R_b"], plan.meta["R_c"]
 
-        def body(pieces, b_send_idx, c_recv_rows, agg_perm, agg_meta, b_loc):
+        def body(pieces, b_send_idx, c_recv_rows, agg_perm, agg_meta,
+                 seg_agg, b_loc):
             pieces = jax.tree_util.tree_map(lambda x: x[0], pieces)
             b_send_idx = b_send_idx[0]
             c_recv_rows = c_recv_rows[0]
@@ -479,12 +564,65 @@ def flat_spmm(plan: FlatExecPlan, b_global: jax.Array, mesh: Mesh,
             # ④ aggregation of received partials
             return scatter_add_rows_exec_op(
                 c, recv_c, c_recv_rows, agg_perm, agg_meta)
+    else:
+        if not plan.meta.get("overlap_ready"):
+            raise ValueError(
+                "overlap=True needs the per-round consumable layouts; "
+                "rebuild with flat_exec_arrays(..., overlap_layouts=True)")
+        b_segments = plan.meta["b_segments"]
+        c_segments = plan.meta["c_segments"]
+
+        def body(pieces, b_send_idx, c_recv_rows, agg_perm, agg_meta,
+                 seg_agg, b_loc):
+            pieces = jax.tree_util.tree_map(lambda x: x[0], pieces)
+            b_send_idx = b_send_idx[0]
+            c_recv_rows = c_recv_rows[0]
+            seg_agg = {k: v[0] for k, v in seg_agg.items()}
+            n = b_loc.shape[1]
+
+            # ① pack once; every B round is issued up front — the
+            #   unrolled permutes are mutually independent, so the async
+            #   collective scheduler keeps round k+1 on the wire while
+            #   round k's segment compute (step ④) runs
+            send_b = pack_rows_op(b_loc, b_send_idx)  # [R_b, N]
+            recv_b = [ppermute(jax.lax.slice_in_dim(send_b, off, off + slot),
+                               axis, _shift_perm(P_, d))
+                      for d, off, slot in b_segments]
+
+            # ② per-round partial-C compute feeding its own round's wire:
+            #   round i's permute departs after only ITS rowp slice ran
+            recv_c = []
+            for i, (d, off, slot) in enumerate(c_segments):
+                part = be.compute(pieces[f"rowp@{i}"], b_loc, slot)
+                recv_c.append(ppermute(part, axis, _shift_perm(P_, d)))
+
+            # ③ diagonal block while the first rounds fly
+            c = be.compute(pieces["diag"], b_loc, m_local)
+
+            # ④ consume B rounds as they land: cumulative receive prefix
+            #   + segment-accumulating compute (bit-identical to staged)
+            colp_acc = jnp.zeros((m_local, n), b_loc.dtype)
+            prefix = None
+            for i, seg in enumerate(recv_b):
+                prefix = seg if prefix is None else jnp.concatenate(
+                    [prefix, seg], axis=0)
+                colp_acc = backend_compute_segment(
+                    be, pieces[f"colp@{i}"], prefix, colp_acc)
+            c = c + colp_acc
+
+            # ⑤ per-round aggregation of received partials
+            for i, (d, off, slot) in enumerate(c_segments):
+                c = scatter_add_rows_exec_op(
+                    c, recv_c[i],
+                    jax.lax.slice_in_dim(c_recv_rows, off, off + slot),
+                    seg_agg[f"perm@{i}"], seg_agg[f"meta@{i}"])
+            return c
 
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(P(axis),) * 6,
+                   in_specs=(P(axis),) * 7,
                    out_specs=P(axis))
     return fn(pieces, plan.b_send_idx, plan.c_recv_rows,
-              plan.agg_perm, plan.agg_meta, b_global)
+              plan.agg_perm, plan.agg_meta, plan.seg_agg, b_global)
 
 
 # ---------------------------------------------------------------------------
@@ -494,7 +632,8 @@ def flat_spmm(plan: FlatExecPlan, b_global: jax.Array, mesh: Mesh,
 
 def hier_spmm(plan: HierExecPlan, b_global: jax.Array, mesh: Mesh,
               group_axis: str = "g", local_axis: str = "l",
-              backend: Optional[BackendSpec] = None) -> jax.Array:
+              backend: Optional[BackendSpec] = None,
+              overlap: bool = False) -> jax.Array:
     """Two-tier SHIRO schedule on a (group, local) mesh.
 
     Program order follows paper Alg. 1; the two stages use disjoint axes
@@ -503,7 +642,12 @@ def hier_spmm(plan: HierExecPlan, b_global: jax.Array, mesh: Mesh,
     substrate exactly as in ``flat_spmm``; a bucketed schedule (fixed at
     ``hier_exec_arrays`` time) replaces the two inter-group all_to_alls
     with per-group-shift ppermute rounds and serves own-group traffic
-    with a local slice.
+    with a local slice. ``overlap=True`` round-pipelines a bucketed
+    plan: the shift-0 own-group segment computes while the inter-group
+    fetch rounds fly, each group shift's C transfer departs straight out
+    of its own intra-group reduce-scatter, and every received slab is
+    consumed the moment it lands — same collective-permutes,
+    bit-identical C.
     """
     m_local = plan.meta["m_local"]
     G, L = plan.G, plan.L
@@ -513,7 +657,7 @@ def hier_spmm(plan: HierExecPlan, b_global: jax.Array, mesh: Mesh,
 
     if sched.kind == "single":
         def body(pieces, b_group_send_idx, c_recv_rows, agg_perm, agg_meta,
-                 b_loc):
+                 seg_agg, b_loc):
             pieces = jax.tree_util.tree_map(lambda x: x[0, 0], pieces)
             b_group_send_idx = b_group_send_idx[0, 0]
             c_recv_rows = c_recv_rows[0, 0]
@@ -557,15 +701,16 @@ def hier_spmm(plan: HierExecPlan, b_global: jax.Array, mesh: Mesh,
                 c, recv_cg.reshape(G * max_cg, n),
                 c_recv_rows.reshape(-1), agg_perm, agg_meta)
             return c[None]
-    else:
+    elif not overlap:
         bg_segments: Segments = plan.meta["bg_segments"]
         cg_segments: Segments = plan.meta["cg_segments"]
+        bg_all: Segments = plan.meta["bg_all"]
         local_b = plan.meta["local_b"]
         local_c = plan.meta["local_c"]
         R_bg, R_cg = plan.meta["R_bg"], plan.meta["R_cg"]
 
         def body(pieces, b_group_send_idx, c_recv_rows, agg_perm, agg_meta,
-                 b_loc):
+                 seg_agg, b_loc):
             pieces = jax.tree_util.tree_map(lambda x: x[0, 0], pieces)
             b_send_flat = b_group_send_idx[0, 0]
             c_recv_flat = c_recv_rows[0, 0]
@@ -596,21 +741,92 @@ def hier_spmm(plan: HierExecPlan, b_global: jax.Array, mesh: Mesh,
                 lambda dg, off, slot: jax.lax.slice_in_dim(agg[dg], 0, slot),
                 local=local_c)
 
-            # Stage II.② intra-group B distribution
+            # Stage II.② intra-group B distribution; the gathered buffer
+            # is re-laid SEGMENT-major ([L·off, L·(off+slot)) per group
+            # shift) to match the colp index space — the order the
+            # overlapped executor consumes segments in, so both paths
+            # accumulate identically
             all_bg = jax.lax.all_gather(recv_bg, local_axis, axis=0,
                                         tiled=False)  # [L, R_bg, N]
+            gparts = [all_bg[:, off:off + slot, :].reshape(L * slot, n)
+                      for _, off, slot in bg_all]
+            gathered = (jnp.concatenate(gparts, axis=0) if gparts
+                        else jnp.zeros((L * R_bg, n), b_loc.dtype))
 
             c = be.compute(pieces["diag"], b_loc, m_local)
-            c = c + be.compute(pieces["colp"], all_bg.reshape(L * R_bg, n),
-                               m_local)
+            c = c + be.compute(pieces["colp"], gathered, m_local)
             c = scatter_add_rows_exec_op(
                 c, recv_cg, c_recv_flat, agg_perm, agg_meta)
+            return c[None]
+    else:
+        if not plan.meta.get("overlap_ready"):
+            raise ValueError(
+                "overlap=True needs the per-round consumable layouts; "
+                "rebuild with hier_exec_arrays(..., overlap_layouts=True)")
+        bg_all = plan.meta["bg_all"]
+        cg_all = plan.meta["cg_all"]
+
+        def body(pieces, b_group_send_idx, c_recv_rows, agg_perm, agg_meta,
+                 seg_agg, b_loc):
+            pieces = jax.tree_util.tree_map(lambda x: x[0, 0], pieces)
+            b_send_flat = b_group_send_idx[0, 0]
+            c_recv_flat = c_recv_rows[0, 0]
+            seg_agg = {k: v[0, 0] for k, v in seg_agg.items()}
+            n = b_loc.shape[1]
+
+            # Stage I.① inter-group B fetch, issued round by round; the
+            # shift-0 own-group segment never touches the wire
+            send_bg = pack_rows_op(b_loc, b_send_flat)  # [R_bg, N]
+            b_segs = []
+            for dg, off, slot in bg_all:
+                seg = jax.lax.slice_in_dim(send_bg, off, off + slot)
+                if dg != 0:
+                    seg = ppermute(seg, group_axis, _shift_perm(G, dg))
+                b_segs.append(seg)
+
+            # Stage I.① intra-group pre-aggregation, one reduce-scatter
+            # per consumed group shift — round dg's inter-group C
+            # transfer departs as soon as ITS tile is aggregated, while
+            # the remaining shifts are still reducing (Alg. 1's
+            # "inter-group ∥ intra-group" made explicit in dataflow)
+            partials = be.compute(pieces["rowp"], b_loc, G * L * max_cg)
+            partials = partials.reshape(G, L * max_cg, n)
+            c_segs = []
+            for dg, off, slot in cg_all:
+                agg_dg = psum_scatter(partials[dg], local_axis,
+                                      scatter_dimension=0, tiled=True)
+                seg = jax.lax.slice_in_dim(agg_dg, 0, slot)
+                if dg != 0:
+                    seg = ppermute(seg, group_axis, _shift_perm(G, dg))
+                c_segs.append(seg)
+
+            # Stage II: own-group compute first (overlaps the in-flight
+            # fetch rounds), then consume each gathered slab as it lands
+            c = be.compute(pieces["diag"], b_loc, m_local)
+            colp_acc = jnp.zeros((m_local, n), b_loc.dtype)
+            prefix = None
+            for i, seg in enumerate(b_segs):
+                gathered = jax.lax.all_gather(
+                    seg, local_axis, axis=0, tiled=False)
+                gathered = gathered.reshape(-1, n)  # [L·slot, N]
+                prefix = gathered if prefix is None else jnp.concatenate(
+                    [prefix, gathered], axis=0)
+                colp_acc = backend_compute_segment(
+                    be, pieces[f"colp@{i}"], prefix, colp_acc)
+            c = c + colp_acc
+
+            # per-round aggregation of the inter-group partials
+            for i, (dg, off, slot) in enumerate(cg_all):
+                c = scatter_add_rows_exec_op(
+                    c, c_segs[i],
+                    jax.lax.slice_in_dim(c_recv_flat, off, off + slot),
+                    seg_agg[f"perm@{i}"], seg_agg[f"meta@{i}"])
             return c[None]
 
     gl = P(group_axis, local_axis)
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(gl,) * 5 + (P((group_axis, local_axis)),),
+                   in_specs=(gl,) * 6 + (P((group_axis, local_axis)),),
                    out_specs=gl)
     out = fn(pieces, plan.b_group_send_idx, plan.c_recv_rows,
-             plan.agg_perm, plan.agg_meta, b_global)
+             plan.agg_perm, plan.agg_meta, plan.seg_agg, b_global)
     return out.reshape(-1, b_global.shape[1])

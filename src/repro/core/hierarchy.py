@@ -33,7 +33,7 @@ Buffer layouts (static, jit-compatible):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

@@ -33,7 +33,9 @@ Third backends register via ``register_backend`` (see ROADMAP.md
 from __future__ import annotations
 
 import dataclasses
-from typing import ClassVar, Dict, List, Protocol, Tuple, Union, runtime_checkable
+from typing import (
+    ClassVar, Dict, List, Protocol, Sequence, Tuple, Union, runtime_checkable,
+)
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +51,8 @@ __all__ = [
     "get_backend",
     "register_backend",
     "available_backends",
+    "backend_prepare_segments",
+    "backend_compute_segment",
 ]
 
 Piece = Dict[str, jax.Array]
@@ -56,7 +60,13 @@ Piece = Dict[str, jax.Array]
 
 @runtime_checkable
 class LocalSpmmBackend(Protocol):
-    """Local sparse-times-dense substrate used inside the executors."""
+    """Local sparse-times-dense substrate used inside the executors.
+
+    Beyond ``prepare``/``compute``, a backend MAY implement the
+    round-pipelined pair ``prepare_segments``/``compute_segment`` (see
+    ``backend_prepare_segments`` / ``backend_compute_segment`` for the
+    contract and the generic fallbacks the executors use otherwise).
+    """
 
     name: str
 
@@ -65,6 +75,60 @@ class LocalSpmmBackend(Protocol):
 
     def compute(self, piece: Piece, b: jax.Array, m_out: int) -> jax.Array:
         """C[m_out, N] = piece @ b for one process's (stripped) piece."""
+
+
+# ---------------------------------------------------------------------------
+# per-round segment compute (overlapped executors)
+# ---------------------------------------------------------------------------
+#
+# The overlapped executors (core.dist_spmm, overlap=True) consume a piece
+# one communication round at a time. The contract is CUMULATIVE-PREFIX:
+#
+# * ``prepare_segments(csrs, cuts)`` — host side. ``cuts`` are ascending
+#   column cut points over the piece's flat receive space (one per round,
+#   the last equal to the covered width). Segment ``i`` owns the nonzeros
+#   the backend assigns to rounds ``(prev_cut, cuts[i]]`` — column indices
+#   stay ABSOLUTE, so a backend may move a nonzero to a LATER segment
+#   (e.g. a BSR block straddling a cut waits for the next round) but
+#   never to an earlier one.
+# * ``compute_segment(piece, b_prefix, acc)`` — device side.
+#   ``b_prefix`` is the concatenation of every received segment so far
+#   (rows ``[0, cuts[i])`` of the staged receive space), and the return
+#   value is ``acc`` plus this segment's contributions.
+#
+# Accumulating segment-by-segment in ascending-cut order therefore
+# replays the staged compute's per-element addition chain exactly: the
+# fold over segments inserts only exact identity terms (fresh zero
+# accumulators), which is what makes overlapped and staged execution
+# bit-identical rather than merely allclose.
+
+
+def _cut_cols(csrs: List[CSRMatrix], lo: int, hi: int) -> List[CSRMatrix]:
+    """Keep only nonzeros with column in [lo, hi); shape/indices unchanged."""
+    return [c.select_nonzeros((c.indices >= lo) & (c.indices < hi))
+            for c in csrs]
+
+
+def backend_prepare_segments(be: "LocalSpmmBackend", csrs: List[CSRMatrix],
+                             cuts: Sequence[int]) -> List[Piece]:
+    """Per-round piece layouts (backend override or the generic cut)."""
+    fn = getattr(be, "prepare_segments", None)
+    if fn is not None:
+        return fn(csrs, cuts)
+    out, lo = [], 0
+    for hi in cuts:
+        out.append(be.prepare(_cut_cols(csrs, lo, hi)))
+        lo = hi
+    return out
+
+
+def backend_compute_segment(be: "LocalSpmmBackend", piece: Piece,
+                            b_prefix: jax.Array, acc: jax.Array) -> jax.Array:
+    """acc + (segment piece @ b_prefix) — override or generic fallback."""
+    fn = getattr(be, "compute_segment", None)
+    if fn is not None:
+        return fn(piece, b_prefix, acc)
+    return acc + be.compute(piece, b_prefix, acc.shape[0])
 
 
 # ---------------------------------------------------------------------------
@@ -112,6 +176,15 @@ class CooBackend:
     def compute(self, piece: Piece, b: jax.Array, m_out: int) -> jax.Array:
         return coo_spmm_local(piece["row"], piece["col"], piece["val"],
                               b, m_out)
+
+    def compute_segment(self, piece: Piece, b_prefix: jax.Array,
+                        acc: jax.Array) -> jax.Array:
+        # scatter straight into the running accumulator — the same
+        # gather/scatter-add chain the staged compute runs, resumed
+        from ..kernels.ops import coo_accumulate_rows_op
+
+        return coo_accumulate_rows_op(acc, piece["row"], piece["col"],
+                                      piece["val"], b_prefix)
 
 
 # ---------------------------------------------------------------------------
@@ -177,6 +250,45 @@ class BsrBackend:
             out = bsr_spmm_pallas(cols, blocks, b_p, bn=self.bn,
                                   interpret=bool(interpret))
         return out[:m_out, :n].astype(b.dtype)
+
+    def prepare_segments(self, csrs: List[CSRMatrix],
+                         cuts: Sequence[int]) -> List[Piece]:
+        """Block-aligned rounds: interior cuts floor to the bk grid.
+
+        A (bm × bk) block straddling a cut would mix two rounds'
+        received columns inside one MXU dot, so it is deferred to the
+        first round whose prefix covers it whole — the cumulative-prefix
+        contract allows exactly this. Block-column ids stay absolute, so
+        every segment's blocks index the same K grid the staged kernel
+        uses and the per-element accumulation chains coincide.
+        """
+        bk = self.block[1]
+        out, lo = [], 0
+        for i, hi in enumerate(cuts):
+            hi_b = hi if i == len(cuts) - 1 else (hi // bk) * bk
+            hi_b = max(hi_b, lo)
+            out.append(self.prepare(_cut_cols(csrs, lo, hi_b)))
+            lo = hi_b
+        return out
+
+    def compute_segment(self, piece: Piece, b_prefix: jax.Array,
+                        acc: jax.Array) -> jax.Array:
+        """Resume the staged kernel's t-step accumulation chain.
+
+        The staged kernel folds one stored block per t step into the
+        output tile; summing a whole segment before adding it to ``acc``
+        would regroup that chain (``acc + (c₁ + c₂)`` vs
+        ``(acc + c₁) + c₂``) and drift by an ulp. Chaining one t slot at
+        a time keeps every addition in the staged order, so the Pallas
+        and interpret paths stay bit-identical (``impl="ref"`` reduces
+        its einsum jointly over (t, k) and is only allclose here).
+        """
+        cols, blocks = piece["block_cols"], piece["blocks"]
+        for t in range(cols.shape[1]):
+            step = {"block_cols": cols[:, t:t + 1],
+                    "blocks": blocks[:, t:t + 1]}
+            acc = acc + self.compute(step, b_prefix, acc.shape[0])
+        return acc
 
 
 # ---------------------------------------------------------------------------

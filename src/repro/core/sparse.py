@@ -11,7 +11,7 @@ deduplicated) structure so that plans are deterministic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 

@@ -8,8 +8,7 @@ resize changes only the shard→host assignment, never the sample order.
 from __future__ import annotations
 
 import dataclasses
-import os
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -14,7 +14,7 @@ Axis roles:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +34,7 @@ __all__ = [
     "scatter_add_rows_op",
     "pack_rows_op",
     "scatter_add_rows_exec_op",
+    "coo_accumulate_rows_op",
     "prepare_sorted_scatter",
 ]
 
@@ -125,6 +125,23 @@ def scatter_add_rows_exec_op(c: jax.Array, partials: jax.Array,
         return _ref.scatter_add_rows_ref(c, partials, tgt)
     return scatter_add_rows_sorted_pallas(
         c, partials[perm], meta, interpret=(be == "interpret"))
+
+
+def coo_accumulate_rows_op(acc: jax.Array, row: jax.Array, col: jax.Array,
+                           val: jax.Array, b: jax.Array) -> jax.Array:
+    """Segment-accumulating COO scatter-add: ``acc[row[e]] += val[e]·b[col[e]]``.
+
+    The overlapped executors consume one communication round at a time;
+    each round's column-covered nonzeros land here, scattering straight
+    into the running per-process accumulator instead of a fresh zeros
+    buffer. Resuming the accumulator preserves the staged compute's
+    per-element addition chain exactly (``coo_spmm_local`` is the chain
+    started from zeros), so overlapped C stays bit-identical. Pure
+    gather + scatter-add on every kernel backend — XLA fuses it well and
+    both primitives carry native JVP/transpose rules, so gradients flow
+    through overlapped handles without a custom rule.
+    """
+    return acc.at[row].add(b[col] * val[:, None])
 
 
 @scatter_add_rows_exec_op.defjvp

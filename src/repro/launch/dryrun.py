@@ -25,7 +25,6 @@ import argparse
 import json
 import time
 import traceback
-from functools import partial
 from typing import Any, Dict, Optional
 
 import jax

@@ -15,12 +15,11 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from ..distributed.context import DistContext
 from ..models.config import ModelConfig
 from ..models.transformer import init_decode_cache, init_params
 from ..optim.adamw import adamw_init

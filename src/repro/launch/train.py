@@ -14,7 +14,7 @@ import jax
 import numpy as np
 
 from ..configs import ARCHS, get_config, get_smoke_config
-from ..data.pipeline import SyntheticLM, make_batches
+from ..data.pipeline import SyntheticLM
 from ..models.transformer import init_params
 from ..optim.adamw import AdamWConfig
 from ..train.trainer import Trainer, TrainerConfig

@@ -8,7 +8,7 @@ precomputed frame/patch embeddings per the assignment note).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 __all__ = ["ModelConfig"]
 

@@ -7,7 +7,7 @@ checkpointing and elastic resharding treat it like any other pytree.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

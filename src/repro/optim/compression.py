@@ -16,7 +16,7 @@ applies them per-step around psum when ``grad_compression`` is enabled.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

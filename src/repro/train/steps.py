@@ -10,8 +10,7 @@ compute of microbatch i+1 under XLA's latency-hiding scheduler).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ import dataclasses
 import logging
 import signal
 import time
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Dict, Iterator, Optional
 
 import jax
 import numpy as np

@@ -1,0 +1,98 @@
+"""The benchmarks/run.py regression gate (no jax execution needed).
+
+Covers the CI bench-smoke contract: --compare fails on >tolerance
+regressions of the deterministic model fields (padded_rows /
+modeled_time) and on baseline records missing from the run; a family
+that raises mid-sweep still ships its partial records plus an "error"
+marker and exits 2 — distinguishable from a regression's exit 1.
+"""
+import json
+import types
+
+import pytest
+
+from benchmarks import run as runner
+
+
+def _rec(bench, **fields):
+    return {"bench": bench, "us_per_call": 1.0, **fields}
+
+
+def test_compare_passes_within_tolerance():
+    base = [_rec("BENCH_a", padded_rows=100, modeled_time=1e-5)]
+    cur = [_rec("BENCH_a", padded_rows=104, modeled_time=1.04e-5)]
+    assert runner.compare_records(cur, base, 0.05) == []
+
+
+def test_compare_flags_regression_and_missing():
+    base = [_rec("BENCH_a", padded_rows=100, modeled_time=1e-5),
+            _rec("BENCH_b", padded_rows=10)]
+    cur = [_rec("BENCH_a", padded_rows=111, modeled_time=1e-5)]
+    violations = runner.compare_records(cur, base, 0.05)
+    assert any("BENCH_a.padded_rows" in v for v in violations)
+    assert any("BENCH_b: missing" in v for v in violations)
+    # improvements never trip the gate
+    better = [_rec("BENCH_a", padded_rows=50, modeled_time=1e-6),
+              _rec("BENCH_b", padded_rows=9)]
+    assert runner.compare_records(better, base, 0.05) == []
+
+
+def test_compare_ignores_error_records_in_gate():
+    base = [{"bench": "BENCH_x", "error": "boom"},
+            _rec("BENCH_a", padded_rows=1)]
+    cur = [_rec("BENCH_a", padded_rows=1)]
+    assert runner.compare_records(cur, base, 0.05) == []
+
+
+def _fake_module(rows, explode_after=None):
+    mod = types.ModuleType("benchmarks.fake")
+
+    def _run():
+        for i, row in enumerate(rows):
+            if explode_after is not None and i == explode_after:
+                raise RuntimeError("device exploded")
+            yield row
+
+    mod.run = _run
+    return mod
+
+
+def test_crash_emits_partial_records_error_field_and_exit_2(
+        monkeypatch, tmp_path, capsys):
+    import benchmarks
+
+    fake = _fake_module(["fake/ok,1.0,padded_rows=10;modeled_time=1.0e-05",
+                         "fake/never,1.0,padded_rows=1"], explode_after=1)
+    monkeypatch.setattr(benchmarks, "fig5_patterns", fake, raising=False)
+    out = tmp_path / "bench.json"
+    with pytest.raises(SystemExit) as exc:
+        runner.main(["--only", "fake", "--json", str(out)])
+    assert exc.value.code == runner.EXIT_CRASHED
+    records = json.loads(out.read_text())["records"]
+    by_bench = {r["bench"]: r for r in records}
+    assert "error" in by_bench["BENCH_fake"]  # the crash marker
+    assert by_bench["BENCH_fake/ok"]["padded_rows"] == 10  # partial rows ship
+
+
+def test_regression_exit_code_is_1(monkeypatch, tmp_path):
+    import benchmarks
+
+    fake = _fake_module(["fake/ok,1.0,padded_rows=20;modeled_time=1.0e-05"])
+    monkeypatch.setattr(benchmarks, "fig5_patterns", fake, raising=False)
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(
+        {"records": [_rec("BENCH_fake/ok", padded_rows=10,
+                          modeled_time=1e-5)]}))
+    with pytest.raises(SystemExit) as exc:
+        runner.main(["--only", "fake", "--compare", str(baseline)])
+    assert exc.value.code == runner.EXIT_REGRESSED
+
+
+def test_committed_smoke_baseline_matches_gate_fields():
+    """The committed baseline must carry the fields the gate checks."""
+    with open("benchmarks/baseline_smoke.json") as f:
+        records = json.load(f)["records"]
+    assert records, "baseline_smoke.json is empty"
+    gated = [r for r in records
+             if any(f in r for f in runner.GATE_FIELDS)]
+    assert len(gated) >= 8  # sched_buckets + overlap_sweep smoke rows

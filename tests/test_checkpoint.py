@@ -1,5 +1,4 @@
 """Checkpoint manager: atomicity, retain-k, resume, ELASTIC resharding."""
-import json
 import os
 
 import jax

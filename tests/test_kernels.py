@@ -2,7 +2,6 @@
 
 All kernels run in interpret mode (CPU container; TPU is the target).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -10,7 +9,7 @@ import pytest
 from repro.kernels.bsr_spmm import bsr_spmm_pallas
 from repro.kernels.gather_rows import gather_rows_pallas
 from repro.kernels.ops import (
-    bsr_spmm_op, gather_rows_op, prepare_sorted_scatter, scatter_add_rows_op,
+    gather_rows_op, prepare_sorted_scatter, scatter_add_rows_op,
 )
 from repro.kernels.ref import (
     bsr_spmm_ref, gather_rows_ref, scatter_add_rows_ref,

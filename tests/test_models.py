@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.models.transformer import (
-    decode_step, forward, init_decode_cache, init_params, lm_loss,
+    decode_step, forward, init_decode_cache, init_params,
 )
 from repro.optim.adamw import AdamWConfig, adamw_init
 from repro.train.steps import make_train_step

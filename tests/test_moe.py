@@ -4,8 +4,6 @@ The shard_map EP path (classic and SHIRO-dedup) must match the dense
 all-experts reference bit-for-bit up to capacity drops; with generous
 capacity there are no drops and results must be allclose.
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,268 @@
+"""Round-pipelined (overlapped) executors — PR acceptance coverage.
+
+The overlap contract is strict: switching ``overlap=True`` (or letting
+``SpmmConfig(overlap="auto")`` pick it) changes only WHEN work executes.
+
+* C is BIT-IDENTICAL to staged execution — the per-round consumable
+  layouts replay the staged per-element accumulation chains exactly
+  (cumulative-prefix contract, core.local_backend) — across flat/hier ×
+  coo/bsr × K ∈ {1, 4} on the P=8 power-law acceptance matrix.
+* The lowered HLO contains the SAME collective-permutes (operand bytes
+  and op count); overlap reorders the schedule, never the operands.
+* Gradients through an overlapped handle match the dense oracle.
+* ``modeled_time_overlap ≤ modeled_time_staged`` for every K (max ≤ sum
+  per round) and ``≤ modeled_time_schedule`` on the acceptance matrix,
+  and the autotuner's decision is visible in ``h.stats()``.
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import SpmmConfig, compile_spmm
+from repro.core.comm_model import (
+    TSUBAME_LIKE, modeled_time_overlap, modeled_time_schedule,
+    modeled_time_staged,
+)
+from repro.core.comm_schedule import (
+    build_comm_schedule, build_hier_comm_schedule,
+)
+from repro.core.dist_spmm import (
+    flat_exec_arrays, flat_spmm, hier_exec_arrays, hier_spmm,
+)
+from repro.core.hierarchy import build_hier_plan
+from repro.core.local_backend import BsrBackend, coo_spmm_local
+from repro.core.planner import build_plan
+from repro.core.sparse import CSRMatrix
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_spmm_mesh
+
+P = 8
+G, L = 2, 4
+N = 16
+BSR_SMALL = BsrBackend(block=(8, 8), bn=16)
+
+_PERMUTE_RE = re.compile(r"collective-permute(?:-start)?\(")
+
+
+def _problem(power_law_matrix):
+    a = power_law_matrix()
+    rng = np.random.default_rng(7)
+    b = jnp.asarray(rng.standard_normal((a.shape[1], N)).astype(np.float32))
+    return a, b, a.to_dense() @ np.asarray(b)
+
+
+# ---------------------------------------------------------------------------
+# bit-identical C: flat/hier × coo/bsr × K ∈ {1, 4}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("K", [1, 4])
+def test_overlap_bit_identical_flat(power_law_matrix, K):
+    a, b, ref = _problem(power_law_matrix)
+    plan = build_plan(a, P, "joint")
+    sched = build_comm_schedule(plan, K=K)
+    ex = flat_exec_arrays(plan, backends=("coo", BSR_SMALL), schedule=sched)
+    mesh = make_spmm_mesh(P)
+    for be in ("coo", "bsr"):
+        staged = np.asarray(flat_spmm(ex, b, mesh, backend=be))
+        overlapped = np.asarray(flat_spmm(ex, b, mesh, backend=be,
+                                          overlap=True))
+        np.testing.assert_allclose(staged, ref, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"staged/{be}")
+        assert np.array_equal(staged, overlapped), \
+            f"flat K={K} backend={be}: overlap drifted from staged"
+
+
+@pytest.mark.parametrize("K", [1, 4])
+def test_overlap_bit_identical_hier(power_law_matrix, K):
+    a, b, ref = _problem(power_law_matrix)
+    hp = build_hier_plan(build_plan(a, P, "joint"), G, L)
+    sched = build_hier_comm_schedule(hp, K=K)
+    ex = hier_exec_arrays(hp, backends=("coo", BSR_SMALL), schedule=sched)
+    mesh = make_spmm_mesh(P, groups=G)
+    for be in ("coo", "bsr"):
+        staged = np.asarray(hier_spmm(ex, b, mesh, backend=be))
+        overlapped = np.asarray(hier_spmm(ex, b, mesh, backend=be,
+                                          overlap=True))
+        np.testing.assert_allclose(staged, ref, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"staged/{be}")
+        assert np.array_equal(staged, overlapped), \
+            f"hier K={K} backend={be}: overlap drifted from staged"
+
+
+def test_overlap_requires_prepared_layouts(power_law_matrix):
+    """overlap_layouts=False skips the per-round consumables: staged
+    execution works, overlap=True fails loudly instead of silently."""
+    a, b, _ = _problem(power_law_matrix)
+    plan = build_plan(a, P, "joint")
+    ex = flat_exec_arrays(plan, schedule=build_comm_schedule(plan, K=4),
+                          overlap_layouts=False)
+    mesh = make_spmm_mesh(P)
+    flat_spmm(ex, b, mesh)  # staged path unaffected
+    with pytest.raises(ValueError, match="overlap_layouts"):
+        flat_spmm(ex, b, mesh, overlap=True)
+
+
+def test_overlap_single_round_falls_back_to_staged(power_law_matrix):
+    """Single-round plans have no rounds to pipeline: overlap is a no-op."""
+    a, b, _ = _problem(power_law_matrix)
+    plan = build_plan(a, P, "joint")
+    ex = flat_exec_arrays(plan)  # single all_to_all schedule
+    mesh = make_spmm_mesh(P)
+    staged = np.asarray(flat_spmm(ex, b, mesh))
+    overlapped = np.asarray(flat_spmm(ex, b, mesh, overlap=True))
+    assert np.array_equal(staged, overlapped)
+
+
+# ---------------------------------------------------------------------------
+# HLO: overlap changes schedule order, never collective-permute operands
+# ---------------------------------------------------------------------------
+
+
+def _permute_profile(fn, b):
+    sds = jax.ShapeDtypeStruct(b.shape, b.dtype)
+    hlo = jax.jit(fn).lower(sds).compile().as_text()
+    coll = collective_bytes(hlo)
+    return coll.get("collective-permute", 0), len(_PERMUTE_RE.findall(hlo)), \
+        coll.get("all-to-all", 0)
+
+
+def test_overlap_same_collective_permutes_flat(power_law_matrix):
+    a, b, _ = _problem(power_law_matrix)
+    plan = build_plan(a, P, "joint")
+    ex = flat_exec_arrays(plan, schedule=build_comm_schedule(plan, K=4))
+    mesh = make_spmm_mesh(P)
+    st = _permute_profile(lambda x: flat_spmm(ex, x, mesh), b)
+    ov = _permute_profile(lambda x: flat_spmm(ex, x, mesh, overlap=True), b)
+    assert st[0] == ov[0] > 0  # same operand bytes through the permutes
+    assert st[1] == ov[1]      # same number of collective-permute ops
+    assert ov[2] == 0          # and no all_to_all smuggled back in
+
+
+def test_overlap_same_collective_permutes_hier(power_law_matrix):
+    a, b, _ = _problem(power_law_matrix)
+    hp = build_hier_plan(build_plan(a, P, "joint"), G, L)
+    ex = hier_exec_arrays(hp, schedule=build_hier_comm_schedule(hp, K=4))
+    mesh = make_spmm_mesh(P, groups=G)
+    st = _permute_profile(lambda x: hier_spmm(ex, x, mesh), b)
+    ov = _permute_profile(lambda x: hier_spmm(ex, x, mesh, overlap=True), b)
+    assert st[0] == ov[0] > 0
+    assert st[1] == ov[1]
+    assert ov[2] == 0
+
+
+# ---------------------------------------------------------------------------
+# α-β model: pipelining never models worse than serializing
+# ---------------------------------------------------------------------------
+
+
+def test_modeled_overlap_le_staged_every_K(power_law_matrix):
+    plan = build_plan(power_law_matrix(), P, "joint")
+    for K in range(1, 8):
+        sched = build_comm_schedule(plan, K=K)
+        t_ovl = modeled_time_overlap(plan, sched, N, TSUBAME_LIKE)
+        t_staged = modeled_time_staged(plan, sched, N, TSUBAME_LIKE)
+        t_comm = modeled_time_schedule(plan, sched, N, TSUBAME_LIKE)
+        assert t_ovl <= t_staged, K
+        # acceptance: on this matrix the wire dominates every round, so
+        # the overlapped total also beats the comm-only schedule time
+        assert t_ovl <= t_comm, K
+
+
+# ---------------------------------------------------------------------------
+# front door: autotuned decision, bit-identity through the handle, grads
+# ---------------------------------------------------------------------------
+
+
+def test_handle_autotunes_overlap_and_reports_it(power_law_matrix, tmp_path):
+    a, b, ref = _problem(power_law_matrix)
+    h_auto = compile_spmm(a, P, SpmmConfig(schedule=4, overlap="auto"))
+    h_staged = compile_spmm(a, P, SpmmConfig(schedule=4, overlap=False))
+    st = h_auto.stats()
+    assert st["overlap"] is True  # comm-dominated rounds: overlap wins
+    assert st["modeled_time_overlap"] <= st["modeled_time_staged"]
+    assert h_staged.stats()["overlap"] is False
+    c_auto = np.asarray(h_auto(b))
+    np.testing.assert_allclose(c_auto, ref, rtol=1e-4, atol=1e-4)
+    assert np.array_equal(c_auto, np.asarray(h_staged(b)))
+    # the decision survives the save/load round trip
+    path = str(tmp_path / "plan.shiro")
+    h_auto.save(path)
+    from repro.core.api import DistSpmm
+
+    h2 = DistSpmm.load(path, P)
+    assert h2.stats()["overlap"] is True
+    assert np.array_equal(c_auto, np.asarray(h2(b)))
+
+
+def test_single_schedule_handle_never_overlaps(power_law_matrix):
+    a, _, _ = _problem(power_law_matrix)
+    h = compile_spmm(a, P, SpmmConfig(schedule="single", overlap="auto"))
+    assert h.stats()["overlap"] is False
+
+
+def test_grads_through_overlapped_handle_match_oracle(power_law_matrix):
+    a, b, _ = _problem(power_law_matrix)
+    h = compile_spmm(a, P, SpmmConfig(schedule=4, overlap=True))
+    assert h.overlap is True
+    dense = jnp.asarray(a.to_dense())
+
+    def loss_handle(x):
+        return jnp.sum(h(x) ** 2)
+
+    def loss_oracle(x):
+        return jnp.sum((dense @ x) ** 2)
+
+    g_handle = jax.grad(loss_handle)(b)
+    g_oracle = jax.grad(loss_oracle)(b)
+    np.testing.assert_allclose(np.asarray(g_handle), np.asarray(g_oracle),
+                               rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# custom backends without compute_segment use the generic fallback
+# ---------------------------------------------------------------------------
+
+
+class _PlainCooBackend:
+    """Minimal third-party backend: prepare/compute only, no segment API."""
+
+    name = "plaincoo"
+
+    def prepare(self, csrs):
+        from repro.core.local_backend import CooBackend
+
+        return CooBackend().prepare(csrs)
+
+    def compute(self, piece, b, m_out):
+        return coo_spmm_local(piece["row"], piece["col"], piece["val"],
+                              b, m_out)
+
+
+def test_generic_segment_fallback_for_custom_backend(power_law_matrix):
+    a, b, ref = _problem(power_law_matrix)
+    plan = build_plan(a, P, "joint")
+    ex = flat_exec_arrays(plan, backends=(_PlainCooBackend(),),
+                          schedule=build_comm_schedule(plan, K=4))
+    mesh = make_spmm_mesh(P)
+    out = np.asarray(flat_spmm(ex, b, mesh, overlap=True))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_csr_matrix_guard():
+    """Regression guard: segment cutting must not mutate the source CSR."""
+    from repro.core.local_backend import _cut_cols
+    from repro.core.sparse import coo_from_arrays, csr_from_coo
+
+    csr = csr_from_coo(coo_from_arrays(
+        (4, 10), np.array([0, 1, 2, 3]), np.array([1, 4, 7, 9])))
+    before = (csr.indptr.copy(), csr.indices.copy(), csr.data.copy())
+    cut = _cut_cols([csr], 3, 8)[0]
+    assert isinstance(cut, CSRMatrix) and cut.shape == csr.shape
+    assert cut.nnz == 2  # cols 4 and 7
+    assert np.array_equal(csr.indptr, before[0])
+    assert np.array_equal(csr.indices, before[1])
+    assert np.array_equal(csr.data, before[2])

@@ -13,7 +13,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.distributed.context import DistContext, make_context
@@ -21,7 +20,7 @@ from repro.launch.mesh import make_mesh
 from repro.models.moe import _moe_dense, init_moe_params, moe_layer
 from repro.models.config import ModelConfig
 from repro.models.transformer import (
-    decode_step, forward, init_decode_cache, init_params, lm_loss,
+    decode_step, init_decode_cache, init_params, lm_loss,
 )
 
 

@@ -1,9 +1,6 @@
 """Trainer loop (resume, preemption, watchdog plumbing) + data pipeline."""
-import os
-
 import jax
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.data.pipeline import MemmapTokens, SyntheticLM
