@@ -15,7 +15,8 @@ from repro.configs import get_config, get_smoke_config
 from repro.distributed.context import DistContext
 from repro.launch.mesh import make_mesh
 from repro.models.moe import (
-    compile_dispatch, init_moe_params, moe_comm_rows, moe_layer,
+    compile_dispatch, dispatch_matrix, dispatch_session, init_moe_params,
+    moe_comm_rows, moe_layer,
 )
 
 from .common import fmt_row, time_call
@@ -61,4 +62,19 @@ def run() -> list:
         f"padded_rows={st['volume_rows_padded']};"
         f"strategy={st['strategy']};schedule={st['schedule_kind']};"
         f"K={st['schedule_K']};backend={st['default_backend']}"))
+
+    # (d) routing drift through the session lifecycle: measured pattern
+    # delta of a shifted routing snapshot vs the planned one, and the
+    # off-path replan cost when it crosses the threshold
+    session = dispatch_session(cfg, tokens=512, M=4)
+    shifted = dispatch_matrix(cfg, tokens=512, M=4, seed=3)
+    drift = session.drift(shifted)
+    us_replan = time_call(lambda m: session.replan(m), shifted,
+                          warmup=0, iters=1)
+    st = session.handle().stats()
+    rows.append(fmt_row(
+        "moe/dispatch-drift-replan", us_replan,
+        f"drift={drift:.3f};threshold={st['drift_threshold']};"
+        f"padded_rows={st['volume_rows_padded']};"
+        f"fingerprint={st['pattern_fingerprint']}"))
     return rows

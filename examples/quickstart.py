@@ -69,6 +69,25 @@ def main() -> None:
     assert np.array_equal(np.asarray(loaded(b)), np.asarray(out2))
     print("save -> load -> bit-identical C  ✓")
 
+    # lifecycle: a session owns a P-ladder + the sparsity snapshot, so
+    # fleet resizes pick a pre-planned rung (no MWVC) and pattern drift
+    # triggers an off-path replan with a warm hot-swap
+    from repro.core import SpmmSession
+    from repro.core.planner import plan_build_count
+    sess = SpmmSession.build(a, P, SpmmConfig(schedule="auto"),
+                             p_ladder=(4, 8))
+    n_plans = plan_build_count()
+    sess.on_resize(4)  # lose half the fleet -> nearest rung
+    assert plan_build_count() == n_plans  # pre-planned: no MWVC re-run
+    np.testing.assert_allclose(np.asarray(sess.handle()(b)),
+                               a.to_dense() @ b, rtol=2e-3, atol=2e-3)
+    a_drift = power_law_sparse(512, 512, 8192, 1.4, seed=3)
+    drift, swapped = sess.maybe_replan(a_drift)
+    assert swapped and np.allclose(np.asarray(sess.handle()(b)),
+                                   a_drift.to_dense() @ b, atol=2e-3)
+    print(f"session: resize -> rung P=4 (0 new plans), "
+          f"drift {drift:.2f} -> replan + hot-swap  ✓")
+
 
 if __name__ == "__main__":
     main()

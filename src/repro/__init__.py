@@ -1,7 +1,10 @@
 """Top-level convenience exports: the SHIRO front-door API.
 
     import repro
-    handle = repro.compile_spmm(a, mesh, repro.SpmmConfig(hier="auto"))
+    session = repro.SpmmSession.build(a, repro.Topology.local(8),
+                                      repro.SpmmConfig(hier="auto"),
+                                      p_ladder=(4, 8))
+    handle = repro.compile_spmm(a, mesh)      # the thin one-rung form
 
 Resolution is lazy (PEP 562) so ``import repro`` never touches jax;
 scripts keep setting ``XLA_FLAGS`` before the first real import. The
@@ -9,13 +12,24 @@ paper-branded alias lives in the sibling ``shiro`` package
 (``shiro.compile``). Everything else stays addressed by subpackage
 (``repro.core``, ``repro.models``, ...).
 """
-__all__ = ["SpmmConfig", "DistSpmm", "compile_spmm"]
+__all__ = ["SpmmConfig", "DistSpmm", "compile_spmm", "SpmmSession",
+           "Topology"]
+
+_HOMES = {
+    "SpmmConfig": "core.api",
+    "DistSpmm": "core.api",
+    "compile_spmm": "core.api",
+    "SpmmSession": "core.session",
+    "Topology": "distributed.topology",
+}
 
 
 def __getattr__(name):
     if name in __all__:
-        from .core import api
-        return getattr(api, name)
+        import importlib
+
+        mod = importlib.import_module(f".{_HOMES[name]}", __name__)
+        return getattr(mod, name)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")
 
 

@@ -19,16 +19,39 @@ the contract, and it is covered by tests including a topology change).
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import shutil
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterator, List, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "atomic_dir"]
+
+
+@contextlib.contextmanager
+def atomic_dir(final: str) -> Iterator[str]:
+    """Write a directory atomically: stage in ``<final>.tmp``, publish by
+    a single ``rename``.
+
+    The invariant every bundle in the repo leans on (checkpoints here,
+    plan-ladder bundles in ``core.session``): readers only ever see
+    absent or complete directories — a crash mid-write leaves a ``.tmp``
+    that the next writer clears, never a half-written artifact under the
+    published name. The staged path is yielded; on exception it is left
+    for post-mortem and the published name is untouched.
+    """
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    yield tmp
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
 
 
 def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
@@ -77,25 +100,19 @@ class CheckpointManager:
         """Atomic save: tmp dir + fsync + rename."""
         flat = _flatten_with_paths(tree)
         final = self._step_dir(step)
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-        meta = {
-            "step": step,
-            "time": time.time(),
-            "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                     for k, v in flat.items()},
-            "extra": extra or {},
-        }
-        with open(os.path.join(tmp, "metadata.json"), "w") as f:
-            json.dump(meta, f)
-            f.flush()
-            os.fsync(f.fileno())
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+        with atomic_dir(final) as tmp:
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            meta = {
+                "step": step,
+                "time": time.time(),
+                "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                         for k, v in flat.items()},
+                "extra": extra or {},
+            }
+            with open(os.path.join(tmp, "metadata.json"), "w") as f:
+                json.dump(meta, f)
+                f.flush()
+                os.fsync(f.fileno())
         self._gc()
         return final
 

@@ -3,6 +3,9 @@
 Public API:
   front door         — compile_spmm / SpmmConfig / DistSpmm (autotuned,
                        cacheable, serializable handle; also `shiro.compile`)
+  lifecycle          — SpmmSession (plan ladders, drift replans, hot-swap
+                       serving) + Topology (the execution substrate:
+                       local / mesh / jax.distributed multiprocess)
   sparse containers  — CSRMatrix, COOMatrix, BSRMatrix + generators
   exact covers       — min_vertex_cover_{unweighted,weighted} (König / Dinic)
   offline planning   — build_plan / build_hier_plan (paper §5-§6 preprocessing)
@@ -12,8 +15,9 @@ Public API:
                        the low-level layer the front door composes
   analytics          — strategy_volumes, modeled_time, balance_stats
 """
+from ..distributed.topology import Topology, TopologyError
 from .sparse import (
-    COOMatrix, CSRMatrix, BSRMatrix,
+    COOMatrix, CSRMatrix, BSRMatrix, PatternSnapshot, pattern_snapshot,
     coo_from_arrays, csr_from_coo, csr_from_dense, bsr_from_csr,
     random_sparse, power_law_sparse, hub_sparse, block_rows,
 )
@@ -50,9 +54,12 @@ from .api import (
     SpmmConfig, DistSpmm, compile_spmm, make_spmm_fn,
     register_lowering_hook, unregister_lowering_hook,
 )
+from .session import LadderRung, SpmmSession
 
 __all__ = [
+    "Topology", "TopologyError",
     "COOMatrix", "CSRMatrix", "BSRMatrix",
+    "PatternSnapshot", "pattern_snapshot",
     "coo_from_arrays", "csr_from_coo", "csr_from_dense", "bsr_from_csr",
     "random_sparse", "power_law_sparse", "hub_sparse", "block_rows",
     "hopcroft_karp", "min_vertex_cover_unweighted", "min_vertex_cover_weighted",
@@ -75,4 +82,5 @@ __all__ = [
     "hier_exec_arrays", "flat_spmm", "hier_spmm", "coo_spmm_local",
     "SpmmConfig", "DistSpmm", "compile_spmm", "make_spmm_fn",
     "register_lowering_hook", "unregister_lowering_hook",
+    "SpmmSession", "LadderRung",
 ]

@@ -17,8 +17,10 @@ behind a single prepared handle:
 Autotune decision procedure (all offline, α-β model from ``comm_model``):
 
 1. ``build_plan(a, P, strategy, pad_to)`` — the flat SHIRO plan (MWVC).
-2. flat vs hierarchical: ``hier="auto"`` derives a (G, L) grouping from
-   ``net.group_size`` and keeps the hierarchical executor iff
+2. flat vs hierarchical: ``hier="auto"`` takes the topology's intrinsic
+   (G, L) tiers (two-axis mesh shape, hosts × local devices) — falling
+   back to a ``net.group_size`` divisor sweep on structureless
+   substrates — and keeps the hierarchical executor iff
    ``modeled_time_hier`` beats ``modeled_time`` at ``n_dense_hint`` dense
    columns; an explicit ``(G, L)`` forces it; ``None`` stays flat.
 3. schedule: ``"auto"`` sweeps K = 1..k_max bucketed ppermute schedules
@@ -45,6 +47,13 @@ Drop to the low-level layer when you need a custom communication schedule
 object, a mesh the handle's axis conventions don't cover, or per-call
 control of exec-plan internals — the handle composes exactly those
 functions and nothing else.
+
+Lifecycle lives one layer up: ``compile_spmm`` is the thin one-rung form
+of ``core.session.SpmmSession`` (P-ladders for elastic resizes,
+drift-triggered replans with warm hot-swaps, ladder bundle save/load),
+and every entry point here names its execution substrate through
+``distributed.topology.Topology`` (``Topology | Mesh | int | None`` are
+all accepted and normalized by ``Topology.resolve``).
 """
 from __future__ import annotations
 
@@ -57,9 +66,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from ..compat import make_mesh as _compat_make_mesh
+from ..distributed.topology import Topology
 from .comm_model import (
-    NetworkSpec, TSUBAME_LIKE, choose_hier_schedule, choose_schedule,
+    NetworkSpec, choose_hier_schedule, choose_schedule,
     modeled_time, modeled_time_hier, modeled_time_hier_overlap,
     modeled_time_hier_schedule, modeled_time_hier_staged,
     modeled_time_overlap, modeled_time_schedule, modeled_time_staged,
@@ -75,7 +84,7 @@ from .dist_spmm import (
 from .hierarchy import HierPlan, build_hier_plan
 from .local_backend import get_backend
 from .planner import SpmmPlan, Strategy, build_plan
-from .sparse import CSRMatrix
+from .sparse import CSRMatrix, PatternSnapshot
 
 __all__ = [
     "SpmmConfig",
@@ -88,7 +97,11 @@ __all__ = [
 
 _SCHEDULE_POLICIES = ("auto", "single")
 _SAVE_FORMAT = "shiro.DistSpmm"
-_SAVE_VERSION = 1
+# v1: PR 3 (no pattern snapshot). v2: adds the planned-pattern snapshot
+# (drift detection) and records the planning topology. Loaders reject
+# anything they don't know how to rebuild — see ``DistSpmm.load``.
+_SAVE_VERSION = 2
+_KNOWN_VERSIONS = (1, 2)
 
 # hooks called as hook(handle, (n_cols, dtype_name, backend)) each time the
 # handle lowers+compiles a NEW executable — tests count cache behavior here
@@ -129,11 +142,22 @@ class SpmmConfig:
                        schedules; ``False`` keeps staged execution.
                        Single-round schedules have no rounds to
                        pipeline and always execute staged.
-    ``net``            two-tier NetworkSpec the autotuner scores against.
+    ``net``            two-tier NetworkSpec the autotuner scores against;
+                       ``"auto"`` (default) derives it from the topology's
+                       structure (``Topology.network()`` — multi-host
+                       fleets and two-axis meshes carry their own tiers;
+                       flat substrates keep the paper's TSUBAME-like
+                       model network, bit-compatible with the old fixed
+                       default).
     ``pad_to``         slot-count rounding forwarded to ``build_plan``.
     ``n_dense_hint``   dense column count the offline model evaluates at
                        (the handle itself serves any N).
     ``k_max``          upper bound of the schedule-K sweep under "auto".
+    ``drift_threshold`` sparsity-pattern Jaccard distance above which a
+                       live operand no longer matches the planned
+                       snapshot — ``SpmmSession.maybe_replan`` re-plans
+                       past it, and ``h.stats()["drift"]`` reports the
+                       last measured value either way.
     """
 
     strategy: Strategy = "joint"
@@ -142,10 +166,11 @@ class SpmmConfig:
     default_backend: Optional[str] = None
     schedule: Union[str, int] = "auto"
     overlap: Union[str, bool] = "auto"
-    net: NetworkSpec = TSUBAME_LIKE
+    net: Union[str, NetworkSpec] = "auto"
     pad_to: int = 1
     n_dense_hint: int = 64
     k_max: int = 4
+    drift_threshold: float = 0.1
 
     def __post_init__(self) -> None:
         if isinstance(self.schedule, bool) or not (
@@ -165,55 +190,22 @@ class SpmmConfig:
                 f"got {self.hier!r}")
         if not self.backends:
             raise ValueError("at least one backend is required")
+        if not (self.net == "auto" or isinstance(self.net, NetworkSpec)):
+            raise ValueError(
+                f"net must be 'auto' or a NetworkSpec; got {self.net!r}")
+        if not (0.0 <= float(self.drift_threshold) <= 1.0):
+            raise ValueError(
+                f"drift_threshold is a Jaccard distance in [0, 1]; "
+                f"got {self.drift_threshold!r}")
 
     def backend_names(self) -> Tuple[str, ...]:
         return tuple(get_backend(spec).name for spec in self.backends)
 
-
-# ---------------------------------------------------------------------------
-# mesh resolution
-# ---------------------------------------------------------------------------
-
-
-def _as_device_array(mesh: Union[Mesh, int]) -> np.ndarray:
-    if isinstance(mesh, Mesh):
-        return np.asarray(mesh.devices).reshape(-1)
-    P = int(mesh)
-    devs = jax.devices()
-    if P > len(devs):
-        raise ValueError(f"mesh needs {P} devices, only {len(devs)} present")
-    return np.asarray(devs[:P])
-
-
-def _flat_mesh(mesh: Union[Mesh, int]) -> Tuple[Mesh, str]:
-    """A 1-axis mesh over the given mesh's devices (reused when possible)."""
-    if isinstance(mesh, Mesh) and len(mesh.axis_names) == 1:
-        return mesh, mesh.axis_names[0]
-    if not isinstance(mesh, Mesh):
-        P = int(mesh)
-        return _compat_make_mesh((P,), ("x",),
-                                 devices=jax.devices()[:P]), "x"
-    return Mesh(_as_device_array(mesh), ("x",)), "x"
-
-
-def _hier_mesh(mesh: Union[Mesh, int], G: int, L: int
-               ) -> Tuple[Mesh, str, str]:
-    """A (G, L) mesh over the given mesh's devices (reused when possible)."""
-    if (isinstance(mesh, Mesh) and len(mesh.axis_names) == 2
-            and tuple(mesh.devices.shape) == (G, L)):
-        return mesh, mesh.axis_names[0], mesh.axis_names[1]
-    devs = _as_device_array(mesh)
-    if devs.size != G * L:
-        raise ValueError(f"mesh has {devs.size} devices, need G*L={G * L}")
-    return Mesh(devs.reshape(G, L), ("g", "l")), "g", "l"
-
-
-def _auto_grouping(P: int, net: NetworkSpec) -> Optional[Tuple[int, int]]:
-    """Largest fast-tier group size L | P with 2 <= L <= net.group_size."""
-    for L in range(min(int(net.group_size), P - 1), 1, -1):
-        if P % L == 0 and P // L >= 2:
-            return P // L, L
-    return None
+    def resolve_net(self, topology: Topology) -> NetworkSpec:
+        """The NetworkSpec the autotuner scores against on ``topology``."""
+        if self.net == "auto":
+            return topology.network()
+        return self.net
 
 
 # ---------------------------------------------------------------------------
@@ -243,13 +235,18 @@ class DistSpmm:
     def __init__(self, *, config: SpmmConfig, plan: SpmmPlan,
                  hier: Optional[HierPlan], schedule: CommSchedule,
                  ex: Union[FlatExecPlan, HierExecPlan], mesh: Mesh,
-                 axis_kwargs: Dict[str, str], decisions: Dict[str, Any]):
+                 axis_kwargs: Dict[str, str], decisions: Dict[str, Any],
+                 snapshot: Optional[PatternSnapshot] = None,
+                 topology: Optional[Topology] = None):
         self.config = config
         self.plan = plan
         self.hier = hier
         self.schedule = schedule
         self.ex = ex
         self.mesh = mesh
+        self.topology = topology
+        self.snapshot = snapshot
+        self.last_drift: float = 0.0
         self.axis_kwargs = dict(axis_kwargs)
         self.decisions = dict(decisions)
         # autotuned execution mode: round-pipelined vs staged (decided in
@@ -320,8 +317,27 @@ class DistSpmm:
         name = self._backend_name(backend)
         if _is_tracer(b):
             return self._raw_call(b, name)
-        b = jax.device_put(jnp.asarray(b), self._in_sharding)
+        if self.topology is not None:
+            b = self.topology.put_global(b, self._in_sharding)
+        else:
+            b = jax.device_put(jnp.asarray(b), self._in_sharding)
         return self._executable(b.shape[1], b.dtype, name)(b)
+
+    def warm_from(self, other: "DistSpmm") -> int:
+        """Pre-lower every executable ``other`` has served.
+
+        The hot-swap contract (``SpmmSession.replan``): the incoming
+        handle compiles the outgoing handle's working set BEFORE the
+        swap, so the first post-swap wave hits a warm cache instead of
+        paying a lowering on the serving path. Returns the number of
+        executables warmed.
+        """
+        warmed = 0
+        for (n_cols, dtype_name, backend) in list(other._executables):
+            if backend in self.ex.backends:
+                self._executable(n_cols, dtype_name, backend)
+                warmed += 1
+        return warmed
 
     def lowered_hlo(self, n_cols: Optional[int] = None, dtype=jnp.float32,
                     backend: Optional[BackendSpec] = None) -> str:
@@ -336,6 +352,18 @@ class DistSpmm:
         return {"lowerings": len(self.lowerings),
                 "hits": self.cache_hits,
                 "keys": tuple(self.lowerings)}
+
+    def drift(self, a_new) -> float:
+        """Pattern drift of ``a_new`` vs the planned snapshot (Jaccard
+        distance in [0, 1]); recorded so ``stats()`` and BENCH records
+        carry the last observed value."""
+        if self.snapshot is None:
+            raise ValueError(
+                "this handle carries no pattern snapshot (plan saved by "
+                "an older version); recompile with compile_spmm to "
+                "enable drift detection")
+        self.last_drift = self.snapshot.drift(a_new)
+        return self.last_drift
 
     def stats(self) -> Dict[str, Any]:
         """Autotune decisions + analytic/padded volumes + cache state."""
@@ -355,7 +383,14 @@ class DistSpmm:
             volume_rows=plan.volume_rows(),
             volume_rows_padded=sched.volume_rows_padded(),
             cache=self.cache_info(),
+            drift=self.last_drift,
+            drift_threshold=self.config.drift_threshold,
         )
+        if self.snapshot is not None:
+            out["pattern_nnz"] = self.snapshot.nnz
+            out["pattern_fingerprint"] = self.snapshot.fingerprint[:12]
+        if self.topology is not None:
+            out["topology"] = self.topology.describe()
         if self.hier is not None:
             out.update(G=self.hier.G, L=self.hier.L,
                        volume_rows_padded_single=single_round_hier_schedule(
@@ -389,7 +424,13 @@ class DistSpmm:
         model checkpoints — unpickling attacker-controlled files executes
         arbitrary code.
         """
-        payload = {
+        with open(path, "wb") as f:
+            pickle.dump(self.save_payload(), f)
+
+    def save_payload(self) -> Dict[str, Any]:
+        """The versioned host-side dict ``save`` pickles (also the
+        per-rung unit ``SpmmSession.save`` bundles)."""
+        return {
             "format": _SAVE_FORMAT,
             "version": _SAVE_VERSION,
             "config": self.config,
@@ -397,13 +438,19 @@ class DistSpmm:
             "hier": self.hier,
             "schedule": self.schedule,
             "decisions": self.decisions,
+            "snapshot": self.snapshot,
         }
-        with open(path, "wb") as f:
-            pickle.dump(payload, f)
 
     @classmethod
-    def load(cls, path: str, mesh: Union[Mesh, int]) -> "DistSpmm":
-        """Rebuild a handle from ``save`` output on this process's mesh.
+    def load(cls, path: str,
+             where: Union[Topology, Mesh, int, None] = None) -> "DistSpmm":
+        """Rebuild a handle from ``save`` output on this process.
+
+        ``where`` is anything ``Topology.resolve`` accepts — a Topology,
+        a Mesh (any axis layout), an int P, or None (every local
+        device). The only requirement is a device count matching the
+        plan's P; mismatches raise here, with the counts, instead of
+        surfacing as a shard_map shape error deep in the first call.
 
         TRUSTED INPUT ONLY: the file is a pickle (see ``save``) — load
         plans from your own fleet's artifact channel, never from
@@ -413,12 +460,39 @@ class DistSpmm:
             payload = pickle.load(f)
         if payload.get("format") != _SAVE_FORMAT:
             raise ValueError(f"{path!r} is not a saved DistSpmm handle")
-        if payload.get("version") != _SAVE_VERSION:
-            raise ValueError(
-                f"unsupported DistSpmm save version {payload.get('version')}")
-        return _materialize(payload["config"], payload["plan"],
-                            payload["hier"], payload["schedule"],
-                            payload["decisions"], mesh)
+        return materialize_payload(payload, where, source=path)
+
+
+def check_payload_version(payload: Dict[str, Any], source: str) -> None:
+    """Reject plan payloads this library version cannot rebuild."""
+    version = payload.get("version")
+    if version not in _KNOWN_VERSIONS:
+        raise ValueError(
+            f"{source!r} carries DistSpmm plan format version {version!r}; "
+            f"this library understands versions {_KNOWN_VERSIONS}. The "
+            f"plan was saved by a different library version — re-run "
+            f"compile_spmm(...).save() (or SpmmSession.save) with the "
+            f"version that will load it; plans are cheap to regenerate "
+            f"from the operand matrix.")
+
+
+def materialize_payload(payload: Dict[str, Any],
+                        where: Union[Topology, Mesh, int, None],
+                        source: str = "<payload>") -> "DistSpmm":
+    """Version-check + topology-check + device prep for a saved plan."""
+    check_payload_version(payload, source)
+    plan: SpmmPlan = payload["plan"]
+    topo = Topology.resolve(plan.P if where is None else where)
+    if topo.P != plan.P:
+        raise ValueError(
+            f"{source!r} was planned for P={plan.P} processes but the "
+            f"given topology has P={topo.P} devices ({topo.kind}); pass "
+            f"any Topology/mesh with exactly {plan.P} devices, or "
+            f"re-plan for P={topo.P} (SpmmSession ladders pre-plan "
+            f"multiple P rungs for exactly this).")
+    return _materialize(payload["config"], plan, payload["hier"],
+                        payload["schedule"], payload["decisions"], topo,
+                        snapshot=payload.get("snapshot"))
 
 
 # ---------------------------------------------------------------------------
@@ -428,46 +502,43 @@ class DistSpmm:
 
 def _materialize(config: SpmmConfig, plan: SpmmPlan,
                  hier: Optional[HierPlan], schedule: CommSchedule,
-                 decisions: Dict[str, Any], mesh: Union[Mesh, int]
-                 ) -> DistSpmm:
+                 decisions: Dict[str, Any], topo: Topology,
+                 snapshot: Optional[PatternSnapshot] = None) -> DistSpmm:
     """Deterministic device-side prep: exec arrays + mesh + handle."""
     # only materialize the per-round consumable layouts when the
     # autotuned decision actually executes overlapped
     overlap = bool(decisions.get("overlap", False))
     if hier is not None:
-        m, ga, la = _hier_mesh(mesh, hier.G, hier.L)
+        m, ga, la = topo.hier_mesh(hier.G, hier.L)
         ex = hier_exec_arrays(hier, backends=config.backends,
                               schedule=schedule, overlap_layouts=overlap)
         axis_kwargs = {"group_axis": ga, "local_axis": la}
     else:
-        m, ax = _flat_mesh(mesh)
+        m, ax = topo.flat_mesh()
         ex = flat_exec_arrays(plan, backends=config.backends,
                               schedule=schedule, overlap_layouts=overlap)
         axis_kwargs = {"axis": ax}
     return DistSpmm(config=config, plan=plan, hier=hier, schedule=schedule,
                     ex=ex, mesh=m, axis_kwargs=axis_kwargs,
-                    decisions=decisions)
+                    decisions=decisions, snapshot=snapshot, topology=topo)
 
 
-def compile_spmm(a: CSRMatrix, mesh: Union[Mesh, int],
-                 config: Optional[SpmmConfig] = None,
-                 **overrides) -> DistSpmm:
-    """Plan, autotune and prepare a distributed SpMM handle for ``a``.
+def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
+                   topo: Topology) -> Tuple[SpmmPlan, Optional[HierPlan],
+                                            CommSchedule, Dict[str, Any]]:
+    """The offline pipeline: MWVC plan + every autotune decision.
 
-    ``mesh``: a ``jax.sharding.Mesh`` (any axis layout — the handle
-    re-axes its devices as needed) or an int P (first P local devices).
-    ``config`` fields can also be passed as keyword overrides:
-    ``compile_spmm(a, 8, backends=("coo", "bsr"), hier="auto")``.
+    Pure host-side work — no devices are touched, so ladder rungs can be
+    planned for P values the current fleet doesn't have, and replans run
+    off the serving path. ``topo`` only informs the model (net="auto"
+    derivation, intrinsic hier grouping), never device placement.
     """
-    config = config or SpmmConfig()
-    if overrides:
-        config = dataclasses.replace(config, **overrides)
-    P = int(_as_device_array(mesh).size)
-    net, n_hint = config.net, config.n_dense_hint
+    net, n_hint = config.resolve_net(topo), config.n_dense_hint
 
     plan = build_plan(a, P, config.strategy, pad_to=config.pad_to)
     decisions: Dict[str, Any] = {
         "net": net.name,
+        "net_source": "topology" if config.net == "auto" else "config",
         "n_dense_hint": n_hint,
         "modeled_time_flat": modeled_time(plan, n_hint, net),
     }
@@ -475,8 +546,11 @@ def compile_spmm(a: CSRMatrix, mesh: Union[Mesh, int],
     # ----- flat vs hierarchical ---------------------------------------
     hier: Optional[HierPlan] = None
     if config.hier is not None:
-        gl = (_auto_grouping(P, net) if config.hier == "auto"
-              else (int(config.hier[0]), int(config.hier[1])))
+        if config.hier == "auto":
+            gl = (topo.auto_grouping(net) if topo.P == P
+                  else _ladder_grouping(P, net))
+        else:
+            gl = (int(config.hier[0]), int(config.hier[1]))
         if gl is not None:
             G, L = gl
             if G * L != P:
@@ -536,7 +610,39 @@ def compile_spmm(a: CSRMatrix, mesh: Union[Mesh, int],
             use_overlap = t_overlap < t_staged
     decisions["overlap"] = use_overlap
 
-    return _materialize(config, plan, hier, schedule, decisions, mesh)
+    return plan, hier, schedule, decisions
+
+
+def _ladder_grouping(P: int, net: NetworkSpec) -> Optional[Tuple[int, int]]:
+    """hier="auto" grouping for a ladder rung whose P differs from the
+    topology's — the substrate's intrinsic tiers don't transfer, so only
+    the structureless fallback sweep applies."""
+    from ..distributed.topology import fallback_grouping
+
+    return fallback_grouping(P, int(net.group_size))
+
+
+def compile_spmm(a: CSRMatrix, where: Union[Topology, Mesh, int, None] = None,
+                 config: Optional[SpmmConfig] = None,
+                 **overrides) -> DistSpmm:
+    """Plan, autotune and prepare a distributed SpMM handle for ``a``.
+
+    ``where``: anything ``Topology.resolve`` accepts — a ``Topology``, a
+    ``jax.sharding.Mesh`` (any axis layout — the handle re-axes its
+    devices as needed), an int P (first P local devices) or None (every
+    local device). ``config`` fields can also be passed as keyword
+    overrides: ``compile_spmm(a, 8, backends=("coo", "bsr"),
+    hier="auto")``.
+
+    This is the thin one-rung form of ``SpmmSession``: the session it
+    builds owns exactly one ladder rung at the topology's P and is
+    discarded after handing out its handle. Keep the session instead
+    (``SpmmSession.build``) when the pattern drifts or the fleet
+    resizes.
+    """
+    from .session import SpmmSession
+
+    return SpmmSession.build(a, where, config, **overrides).handle()
 
 
 # ---------------------------------------------------------------------------

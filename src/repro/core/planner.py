@@ -34,7 +34,19 @@ __all__ = [
     "build_plan",
     "pair_volume_rows",
     "local_piece_csrs",
+    "plan_build_count",
 ]
+
+# Monotone counter of MWVC plan constructions, the expensive offline
+# stage. The session/elastic machinery promises "a ladder-rung resize
+# never re-plans"; tests pin that promise by diffing this counter, the
+# same way register_lowering_hook pins executable-cache behavior.
+_PLAN_BUILDS = 0
+
+
+def plan_build_count() -> int:
+    """Number of ``build_plan`` calls (MWVC runs) in this process."""
+    return _PLAN_BUILDS
 
 Strategy = str  # 'block' | 'col' | 'row' | 'joint'
 _STRATEGIES = ("block", "col", "row", "joint")
@@ -248,6 +260,8 @@ def build_plan(
     """
     if strategy not in _STRATEGIES:
         raise ValueError(f"strategy must be one of {_STRATEGIES}")
+    global _PLAN_BUILDS
+    _PLAN_BUILDS += 1
     m, k = a.shape
     row_bounds = bounds or block_rows(m, P)
     col_bounds = bounds or block_rows(k, P)

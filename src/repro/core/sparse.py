@@ -11,7 +11,8 @@ deduplicated) structure so that plans are deterministic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+import hashlib
+from typing import Sequence, Tuple, Union
 
 import numpy as np
 
@@ -19,6 +20,8 @@ __all__ = [
     "COOMatrix",
     "CSRMatrix",
     "BSRMatrix",
+    "PatternSnapshot",
+    "pattern_snapshot",
     "coo_from_arrays",
     "csr_from_coo",
     "csr_from_dense",
@@ -133,6 +136,56 @@ class CSRMatrix:
         return csr_from_coo(
             COOMatrix((self.shape[1], self.shape[0]), coo.col, coo.row, coo.val)
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternSnapshot:
+    """The sparsity pattern a plan was built against, frozen.
+
+    Drift detection compares a live operand against this snapshot: the
+    plan (MWVC cover, schedule, exec layouts) depends only on WHERE the
+    nonzeros sit, so ``drift()`` is a pure set distance over nonzero
+    coordinates — 0.0 for the planned pattern, 1.0 for a disjoint one
+    (Jaccard distance). Values never enter; a weight update is drift 0.
+
+    Host-side NumPy only: snapshots ride inside saved plans/sessions and
+    their ``fingerprint`` stamps stats/BENCH records.
+    """
+
+    shape: Tuple[int, int]
+    keys: np.ndarray  # int64 [nnz], sorted row * ncols + col
+    fingerprint: str  # sha1 hex of shape + keys
+
+    @property
+    def nnz(self) -> int:
+        return int(self.keys.size)
+
+    def drift(self, other: Union["PatternSnapshot", "CSRMatrix",
+                                 "COOMatrix"]) -> float:
+        """Jaccard distance between nonzero-coordinate sets in [0, 1]."""
+        snap = (other if isinstance(other, PatternSnapshot)
+                else pattern_snapshot(other))
+        if snap.shape != self.shape:
+            return 1.0
+        inter = np.intersect1d(self.keys, snap.keys,
+                               assume_unique=True).size
+        union = self.nnz + snap.nnz - inter
+        if union == 0:
+            return 0.0
+        return 1.0 - inter / union
+
+
+def pattern_snapshot(a: Union[CSRMatrix, COOMatrix]) -> PatternSnapshot:
+    """Snapshot a matrix's sparsity pattern for later drift checks."""
+    if isinstance(a, COOMatrix):
+        keys = np.unique(a.row.astype(np.int64) * a.shape[1] + a.col)
+    else:
+        coo = a.to_coo()
+        keys = np.unique(coo.row.astype(np.int64) * a.shape[1] + coo.col)
+    h = hashlib.sha1()
+    h.update(np.asarray(a.shape, np.int64).tobytes())
+    h.update(keys.tobytes())
+    return PatternSnapshot(tuple(a.shape), keys, h.hexdigest())
 
 
 @dataclasses.dataclass(frozen=True)

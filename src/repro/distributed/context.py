@@ -52,7 +52,23 @@ class DistContext:
         return self.model_axis if self.divisible(n, self.model_axis) else None
 
 
-def make_context(mesh: Mesh, fsdp: bool = False) -> DistContext:
+def make_context(mesh, fsdp: bool = False) -> DistContext:
+    """Build a DistContext from a Mesh or a Topology.
+
+    A Topology contributes the mesh it adopted (model code needs named
+    batch/model axes, which only a mesh carries — a bare device list
+    can't name them). Mesh callers are untouched (the historic
+    signature).
+    """
+    from .topology import Topology, TopologyError
+
+    if isinstance(mesh, Topology):
+        if mesh._mesh is None:
+            raise TopologyError(
+                "make_context needs named (data/model[/pod]) axes; build "
+                "the Topology from a mesh (Topology.from_mesh(make_"
+                "production_mesh())) instead of a bare device count")
+        mesh = mesh._mesh
     names = mesh.axis_names
     if "pod" in names:
         batch = ("pod", "data")

@@ -1,0 +1,301 @@
+"""Topology: one object naming a handle's execution substrate.
+
+Before this module, every front-door entry point threaded a
+``mesh_or_P`` union through its signature (``core/api.py``'s
+``_as_device_array`` / ``_flat_mesh`` / ``_hier_mesh``, ``launch/mesh.py``'s
+``make_spmm_mesh``, ``distributed/context.py``'s mesh-only ``make_context``)
+and each re-derived device lists, axis names and group structure with its
+own conventions. A ``Topology`` owns all of that once:
+
+* **what devices** a plan executes on (``devices`` — first-P local,
+  a mesh's devices, or the global ``jax.devices()`` of a
+  ``jax.distributed`` fleet);
+* **their structure** (``tiers`` — a (G, L) grouping intrinsic to a
+  two-axis mesh or to a hosts × local-devices fleet), so ``hier="auto"``
+  reads the substrate instead of guessing a grouping from
+  ``net.group_size``;
+* **the network model** (``network()`` — a two-tier ``NetworkSpec``
+  derived from that structure for ``SpmmConfig(net="auto")``);
+* **mesh construction** (``flat_mesh()`` / ``hier_mesh(G, L)`` — reusing
+  an adopted caller mesh when its axes already fit, so lowered HLO is
+  identical whether callers pass a mesh or a Topology);
+* **data placement** (``put_global`` — ``device_put`` in one process,
+  ``jax.make_array_from_callback`` across a multi-controller fleet where
+  each host only feeds its addressable shards).
+
+Everything that used to accept ``mesh_or_P`` now accepts
+``Topology | Mesh | int | None`` and normalizes through
+``Topology.resolve`` — the union survives at the edges for
+compatibility, the threading does not.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple, Union
+
+import numpy as np
+from jax.sharding import Mesh
+
+from ..compat import make_mesh as _compat_make_mesh
+
+__all__ = ["Topology", "TopologyError", "fallback_grouping"]
+
+
+class TopologyError(ValueError):
+    """A topology cannot satisfy the requested execution substrate."""
+
+
+def fallback_grouping(P: int, group_size: int) -> Optional[Tuple[int, int]]:
+    """Largest fast-tier group size L | P with 2 <= L <= ``group_size``.
+
+    The grouping guess for substrates with no intrinsic structure — the
+    single shared implementation behind ``Topology.auto_grouping`` and
+    the ladder-rung grouping in ``core.api``.
+    """
+    for L in range(min(int(group_size), P - 1), 1, -1):
+        if P % L == 0 and P // L >= 2:
+            return P // L, L
+    return None
+
+
+def _jax():
+    import jax
+
+    return jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """An execution substrate: devices + structure + network model.
+
+    ``kind``     'local' (first-P single-process devices), 'mesh'
+                 (adopted from a caller's ``jax.sharding.Mesh``) or
+                 'multiprocess' (a ``jax.distributed`` fleet spanning
+                 every process's devices).
+    ``devices``  flat device tuple, length P, in execution order.
+    ``tiers``    intrinsic (G, L) two-tier structure, when the substrate
+                 has one (two-axis mesh shape; hosts × local devices);
+                 None for flat substrates.
+    ``n_hosts``  process count (1 unless 'multiprocess').
+    ``process_index``       this controller's index in the fleet.
+    ``local_device_count``  devices owned by this process.
+    """
+
+    kind: str
+    devices: Tuple[Any, ...]
+    tiers: Optional[Tuple[int, int]] = None
+    n_hosts: int = 1
+    process_index: int = 0
+    local_device_count: Optional[int] = None
+    _mesh: Optional[Mesh] = dataclasses.field(default=None, repr=False,
+                                              compare=False)
+
+    # ----- construction ------------------------------------------------
+
+    @classmethod
+    def local(cls, P: Optional[int] = None) -> "Topology":
+        """First ``P`` devices of this process (all of them when None)."""
+        jax = _jax()
+        devs = jax.local_devices()
+        n = len(devs) if P is None else int(P)
+        if n > len(devs):
+            raise TopologyError(
+                f"topology needs {n} devices, this process has "
+                f"{len(devs)}; shrink P or launch with more devices "
+                f"(e.g. XLA_FLAGS=--xla_force_host_platform_device_count={n})")
+        if n < 1:
+            raise TopologyError(f"topology needs at least 1 device, got {n}")
+        return cls(kind="local", devices=tuple(devs[:n]),
+                   local_device_count=len(devs))
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh) -> "Topology":
+        """Adopt a caller mesh: its devices, and its shape as structure.
+
+        A two-axis mesh contributes its (G, L) shape as intrinsic tiers
+        — ``hier="auto"`` then groups along the mesh's own axes instead
+        of sweeping divisors of ``net.group_size``.
+        """
+        shape = tuple(np.asarray(mesh.devices).shape)
+        tiers = None
+        if len(shape) == 2 and shape[0] >= 2 and shape[1] >= 2:
+            tiers = (int(shape[0]), int(shape[1]))
+        return cls(kind="mesh",
+                   devices=tuple(np.asarray(mesh.devices).reshape(-1)),
+                   tiers=tiers, _mesh=mesh)
+
+    @classmethod
+    def multiprocess(cls) -> "Topology":
+        """The global ``jax.distributed`` fleet (call after
+        ``jax.distributed.initialize`` — see ``repro.launch.multiprocess``).
+
+        Spans every process's devices; the hosts × local-devices grid is
+        the intrinsic (G, L) structure (inter-host = slow tier).
+        """
+        jax = _jax()
+        n_proc = int(jax.process_count())
+        if n_proc < 2:
+            raise TopologyError(
+                "Topology.multiprocess() needs an initialized "
+                "jax.distributed fleet with >= 2 processes; run under "
+                "repro.launch.multiprocess (or call "
+                "jax.distributed.initialize yourself). For single-process "
+                "use Topology.local(P).")
+        devs = tuple(jax.devices())
+        local = int(jax.local_device_count())
+        tiers = None
+        if local >= 2 and n_proc * local == len(devs):
+            tiers = (n_proc, local)
+        return cls(kind="multiprocess", devices=devs, tiers=tiers,
+                   n_hosts=n_proc, process_index=int(jax.process_index()),
+                   local_device_count=local)
+
+    @classmethod
+    def resolve(cls, where: Union["Topology", Mesh, int, None]
+                ) -> "Topology":
+        """Normalize every accepted substrate spelling to a Topology.
+
+        ``Topology`` passes through; a ``Mesh`` adopts its devices and
+        shape; an int P takes the first P local devices; ``None`` takes
+        every local device.
+        """
+        if isinstance(where, Topology):
+            return where
+        if isinstance(where, Mesh):
+            return cls.from_mesh(where)
+        if where is None or isinstance(where, (int, np.integer)):
+            return cls.local(None if where is None else int(where))
+        raise TypeError(
+            f"cannot resolve a Topology from {type(where).__name__!r}; "
+            f"pass a Topology, a jax.sharding.Mesh, an int P, or None")
+
+    # ----- structure ---------------------------------------------------
+
+    @property
+    def P(self) -> int:
+        return len(self.devices)
+
+    @property
+    def is_multiprocess(self) -> bool:
+        return self.kind == "multiprocess"
+
+    def narrow(self, P: int) -> "Topology":
+        """A same-kind topology over the first ``P`` devices.
+
+        The elastic path: a ladder rung smaller than the fleet serves on
+        a prefix of the devices (matching how ``Topology.local(P)``
+        would name them after a shrink).
+        """
+        if P == self.P:
+            return self
+        if P > self.P:
+            raise TopologyError(
+                f"cannot narrow a {self.P}-device topology to P={P}; "
+                f"grow events need a topology over the new fleet "
+                f"(Topology.local / Topology.multiprocess)")
+        return dataclasses.replace(self, devices=self.devices[:P],
+                                   tiers=None, _mesh=None)
+
+    def auto_grouping(self, net) -> Optional[Tuple[int, int]]:
+        """The (G, L) grouping ``hier="auto"`` evaluates.
+
+        Intrinsic tiers win (a two-axis mesh, a multi-host fleet);
+        otherwise fall back to the largest fast-tier group size
+        L | P with 2 <= L <= ``net.group_size`` — the historic guess,
+        now confined to structureless substrates.
+        """
+        if self.tiers is not None:
+            G, L = self.tiers
+            if G >= 2 and L >= 2 and G * L == self.P:
+                return (G, L)
+        return fallback_grouping(self.P, int(net.group_size))
+
+    def network(self, default=None):
+        """A two-tier ``NetworkSpec`` derived from the structure.
+
+        * multiprocess fleets: inter-host hop is the slow tier,
+          ``group_size`` = devices per host, bandwidths by platform
+          (TPU ICI/DCN; notional NIC numbers elsewhere);
+        * two-axis meshes: the outer axis is the slow tier;
+        * flat substrates carry no structural information — the
+          ``default`` (the paper's TSUBAME-like model network unless a
+          caller overrides) is returned unchanged, which keeps
+          ``SpmmConfig(net="auto")`` bit-compatible with the historic
+          fixed default on single-host runs.
+        """
+        from ..core.comm_model import NetworkSpec, TSUBAME_LIKE
+
+        if default is None:
+            default = TSUBAME_LIKE
+        if self.tiers is None:
+            return default
+        G, L = self.tiers
+        platform = getattr(self.devices[0], "platform", "cpu")
+        if platform == "tpu":
+            bw_intra, bw_inter, name = 50e9, 6.25e9, "derived-tpu"
+        elif platform == "gpu":
+            bw_intra, bw_inter, name = 450e9, 25e9, "derived-gpu"
+        else:
+            bw_intra, bw_inter, name = 50e9, 10e9, "derived-cpu"
+        return NetworkSpec(f"{name}-{G}x{L}", bw_intra, bw_inter,
+                           group_size=L)
+
+    def describe(self) -> dict:
+        """Stable summary for ``h.stats()`` / BENCH records."""
+        return {
+            "kind": self.kind,
+            "P": self.P,
+            "tiers": self.tiers,
+            "n_hosts": self.n_hosts,
+            "platform": getattr(self.devices[0], "platform", "unknown"),
+        }
+
+    # ----- mesh construction -------------------------------------------
+
+    def flat_mesh(self) -> Tuple[Mesh, str]:
+        """A 1-axis mesh over the devices (reusing an adopted mesh)."""
+        if (self._mesh is not None
+                and len(self._mesh.axis_names) == 1):
+            return self._mesh, self._mesh.axis_names[0]
+        return _compat_make_mesh((self.P,), ("x",),
+                                 devices=list(self.devices)), "x"
+
+    def hier_mesh(self, G: int, L: int) -> Tuple[Mesh, str, str]:
+        """A (G, L) mesh over the devices (reusing an adopted mesh)."""
+        if (self._mesh is not None
+                and len(self._mesh.axis_names) == 2
+                and tuple(self._mesh.devices.shape) == (G, L)):
+            m = self._mesh
+            return m, m.axis_names[0], m.axis_names[1]
+        if self.P != G * L:
+            raise TopologyError(
+                f"topology has {self.P} devices, need G*L={G * L}")
+        return _compat_make_mesh((G, L), ("g", "l"),
+                                 devices=list(self.devices)), "g", "l"
+
+    # ----- data placement ----------------------------------------------
+
+    def put_global(self, b, sharding):
+        """Place a host array onto ``sharding`` across the substrate.
+
+        Single-process: a plain ``device_put``. Multiprocess: a
+        ``jax.make_array_from_callback`` assembly, where jax asks each
+        host only for the index ranges its addressable devices carry —
+        the per-host data shard never leaves its controller. A global
+        device array already on the target sharding (e.g. one handle's
+        output fed to the next) passes straight through; other global
+        arrays reshard via ``device_put`` (never through the host — a
+        non-addressable array cannot round-trip through NumPy).
+        """
+        jax = _jax()
+        import jax.numpy as jnp
+
+        if not self.is_multiprocess:
+            return jax.device_put(jnp.asarray(b), sharding)
+        if isinstance(b, jax.Array) and not b.is_fully_addressable:
+            if b.sharding == sharding:
+                return b
+            return jax.device_put(b, sharding)
+        b = np.asarray(b)
+        return jax.make_array_from_callback(b.shape, sharding,
+                                            lambda idx: b[idx])

@@ -128,6 +128,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
+    # the dry-run fleet through the same substrate naming as serving:
+    # records carry the Topology so §Roofline rows are attributable
+    from ..distributed.topology import Topology
+
+    rec["topology"] = Topology.from_mesh(mesh).describe()
     dist = make_context(mesh, fsdp=cfg.fsdp)
     rec.update(_compile_one(cfg, shape, mesh, dist, t0, chips))
     rec["params"] = cfg.params_count()

@@ -18,6 +18,7 @@ from typing import Optional, Tuple
 from jax.sharding import Mesh
 
 from ..compat import make_mesh as _compat_make_mesh
+from ..distributed.topology import Topology
 
 __all__ = ["make_production_mesh", "make_mesh", "make_spmm_mesh"]
 
@@ -35,9 +36,15 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_spmm_mesh(P: int, groups: Optional[int] = None) -> Mesh:
-    """Mesh for the SHIRO SpMM executors: flat (x,) or two-tier (g, l)."""
+    """Mesh for the SHIRO SpMM executors: flat (x,) or two-tier (g, l).
+
+    Thin wrapper over ``Topology.local(P)`` — the substrate naming moved
+    to ``repro.distributed.topology``; this spelling remains for
+    low-level code that wants a bare mesh.
+    """
+    topo = Topology.local(P)
     if groups is None:
-        return make_mesh((P,), ("x",))
+        return topo.flat_mesh()[0]
     if P % groups:
         raise ValueError(f"P={P} not divisible by groups={groups}")
-    return make_mesh((groups, P // groups), ("g", "l"))
+    return topo.hier_mesh(groups, P // groups)[0]

@@ -1,0 +1,202 @@
+import os
+import sys
+
+if os.environ.get("REPRO_MP_RANK") is not None:
+    # Worker processes lock their per-process device count BEFORE any
+    # jax import (same load-bearing trick as launch/dryrun.py — jax
+    # freezes the platform device count at first init).
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ.get("REPRO_MP_LOCAL_DEVICES", "4") + " "
+        + os.environ.get("XLA_FLAGS", ""))
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+"""Multi-controller launch: the ``jax.distributed`` entry point.
+
+Every other path in the repo is single-controller (one process, many
+devices). This module runs the front door across a fleet of processes,
+each owning a slice of the devices — the multi-controller SPMD model:
+
+* every process executes the SAME program (plan → session → serve);
+* planning is deterministic host-side NumPy, so each host derives
+  byte-identical plans from the operand — no plan broadcast needed
+  (ship a ``session.save`` bundle over your artifact store when the
+  operand is too big to hand every host);
+* per-host data shards: ``Topology.put_global`` assembles global arrays
+  via ``jax.make_array_from_callback``, which asks each host only for
+  the index ranges its addressable devices carry, and the exec plan's
+  static buffers are partitioned per-device by XLA's constant
+  partitioner — host q materializes the B/C slabs of its own rows;
+* ``Topology.multiprocess()`` names the fleet (hosts × local devices =
+  the intrinsic two-tier structure), so ``hier="auto"`` /
+  ``net="auto"`` read the real substrate.
+
+Two entry modes:
+
+  launcher (the default; what CI runs):
+      python -m repro.launch.multiprocess --nproc 2 --local-devices 4
+  spawns ``--nproc`` copies of itself as workers on this machine with a
+  local coordinator, waits, and propagates any worker failure.
+
+  worker (REPRO_MP_RANK set by the launcher, or exported manually for
+  real fleets): initializes ``jax.distributed`` and runs the quickstart
+  smoke across the fleet — compile through ``SpmmSession``, serve two
+  call shapes, verify every addressable shard against the dense
+  reference, exercise a replan hot-swap.
+"""
+import argparse
+import socket
+import subprocess
+import time
+from typing import Optional
+
+__all__ = ["initialize", "worker_smoke", "main"]
+
+
+def initialize(coordinator: Optional[str] = None,
+               num_processes: Optional[int] = None,
+               process_id: Optional[int] = None):
+    """``jax.distributed.initialize`` from args or REPRO_MP_* env.
+
+    Returns the initialized fleet's ``Topology`` (multiprocess kind).
+    CPU fleets route collectives through gloo where the jax version
+    exposes the knob; TPU fleets auto-detect and can call this with no
+    arguments at all.
+    """
+    import jax
+
+    coordinator = coordinator or os.environ.get("REPRO_MP_COORD")
+    num_processes = (num_processes if num_processes is not None
+                     else int(os.environ.get("REPRO_MP_NPROC", "0")) or None)
+    process_id = (process_id if process_id is not None
+                  else int(os.environ.get("REPRO_MP_RANK", "-1")))
+    if process_id < 0:
+        process_id = None
+    try:  # CPU cross-process collectives (no-op where unavailable)
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:
+        pass
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    from ..distributed.topology import Topology
+
+    return Topology.multiprocess()
+
+
+def worker_smoke() -> None:
+    """The quickstart flow, multi-controller: one session, real fleet."""
+    import numpy as np
+
+    topo = initialize()
+    import jax
+
+    rank = topo.process_index
+    print(f"[rank {rank}] fleet: {topo.n_hosts} hosts x "
+          f"{topo.local_device_count} devices = P={topo.P} "
+          f"(tiers={topo.tiers})", flush=True)
+
+    from ..core.api import SpmmConfig
+    from ..core.session import SpmmSession
+    from ..core.sparse import power_law_sparse
+
+    a = power_law_sparse(128, 128, 1024, 1.3, seed=0)
+    session = SpmmSession.build(a, topo, SpmmConfig(schedule="auto"))
+    handle = session.handle()
+    st = handle.stats()
+    print(f"[rank {rank}] {handle} schedule={st['schedule_kind']}"
+          f"/K={st['schedule_K']} net={st['net']}", flush=True)
+
+    rng = np.random.default_rng(1)
+    for n_cols in (8, 16):
+        b = rng.standard_normal((128, n_cols)).astype(np.float32)
+        c = handle(b)
+        ref = a.to_dense() @ b
+        _check_shards(c, ref, rank, f"N={n_cols}")
+    print(f"[rank {rank}] smoke N=8,16 == dense reference  OK", flush=True)
+
+    # drift -> replan hot-swap, multi-controller: every host replans
+    # deterministically, the swapped handle serves the same fleet
+    a2 = power_law_sparse(128, 128, 1024, 1.3, seed=7)
+    drift, replanned = session.maybe_replan(a2)
+    assert replanned, f"expected a replan, drift={drift}"
+    b = rng.standard_normal((128, 8)).astype(np.float32)
+    _check_shards(session.handle()(b), a2.to_dense() @ b, rank, "replan")
+    print(f"[rank {rank}] drift={drift:.2f} replan hot-swap OK", flush=True)
+    # leave the barrier to the launcher's wait(): exiting early is fine,
+    # the coordination service tears down when every worker is done
+
+
+def _check_shards(c, ref, rank: int, tag: str) -> None:
+    """Every addressable shard must match its rows of the reference."""
+    import numpy as np
+
+    for shard in c.addressable_shards:
+        rows = shard.index[0]
+        np.testing.assert_allclose(
+            np.asarray(shard.data), ref[rows],
+            rtol=2e-4, atol=2e-4,
+            err_msg=f"rank {rank} shard {shard.index} mismatch ({tag})")
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def launch_local(nproc: int, local_devices: int, timeout: float = 600.0
+                 ) -> int:
+    """Spawn ``nproc`` worker copies of this module on this machine."""
+    coord = f"127.0.0.1:{_free_port()}"
+    procs = []
+    for rank in range(nproc):
+        env = dict(os.environ,
+                   REPRO_MP_COORD=coord,
+                   REPRO_MP_NPROC=str(nproc),
+                   REPRO_MP_RANK=str(rank),
+                   REPRO_MP_LOCAL_DEVICES=str(local_devices))
+        procs.append(subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.multiprocess"], env=env))
+    deadline = time.time() + timeout
+    rc = 0
+    for rank, proc in enumerate(procs):
+        remaining = max(1.0, deadline - time.time())
+        try:
+            code = proc.wait(timeout=remaining)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            code = -1
+            print(f"worker {rank} timed out after {timeout:.0f}s",
+                  file=sys.stderr, flush=True)
+        if code != 0:
+            rc = rc or (code if code > 0 else 1)
+            print(f"worker {rank} exited with {code}", file=sys.stderr,
+                  flush=True)
+    # a straggler that outlives a failed sibling would hang the launcher
+    for proc in procs:
+        if proc.poll() is None:
+            proc.kill()
+    return rc
+
+
+def main() -> None:
+    if os.environ.get("REPRO_MP_RANK") is not None:
+        worker_smoke()
+        return
+    ap = argparse.ArgumentParser(
+        description="local multi-controller smoke launcher")
+    ap.add_argument("--nproc", type=int, default=2)
+    ap.add_argument("--local-devices", type=int, default=4,
+                    help="placeholder host devices per worker process")
+    ap.add_argument("--timeout", type=float, default=600.0)
+    args = ap.parse_args()
+    rc = launch_local(args.nproc, args.local_devices, timeout=args.timeout)
+    if rc:
+        raise SystemExit(rc)
+    print(f"multiprocess smoke: {args.nproc} processes x "
+          f"{args.local_devices} devices  OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,7 +35,7 @@ from ..distributed.context import DistContext
 from .config import ModelConfig
 
 __all__ = ["init_moe_params", "moe_layer", "moe_comm_rows",
-           "dispatch_matrix", "compile_dispatch"]
+           "dispatch_matrix", "compile_dispatch", "dispatch_session"]
 
 
 def init_moe_params(key, cfg: ModelConfig, dtype) -> dict:
@@ -285,6 +285,31 @@ def compile_dispatch(cfg: ModelConfig, tokens: int, M: int, mesh=None,
     return compile_spmm(a, M if mesh is None else mesh,
                         config or SpmmConfig(strategy="joint",
                                              schedule="auto"))
+
+
+def dispatch_session(cfg: ModelConfig, tokens: int, M: int, where=None,
+                     config=None, seed: int = 0):
+    """A drift-aware ``SpmmSession`` over the MoE dispatch SpMM.
+
+    MoE routing is the canonical drifting pattern: the dispatch matrix
+    is a function of the router's live decisions, so a distribution
+    shift strands the planned cover. Serve through the session and feed
+    each fresh routing snapshot to ``maybe_replan`` — below
+    ``drift_threshold`` the planned schedule keeps serving (the padded
+    slots absorb small routing churn), past it MWVC + autotune re-run
+    off-path and the handle hot-swaps between waves:
+
+        s = dispatch_session(cfg, T, M)
+        drift, swapped = s.maybe_replan(dispatch_matrix(cfg, T, M, seed=k))
+        y = s.handle()(x)
+    """
+    from ..core.api import SpmmConfig
+    from ..core.session import SpmmSession
+
+    a = dispatch_matrix(cfg, tokens, M, seed=seed)
+    return SpmmSession.build(a, M if where is None else where,
+                             config or SpmmConfig(strategy="joint",
+                                                  schedule="auto"))
 
 
 def moe_comm_rows(cfg: ModelConfig, tokens: int, M: int, seed: int = 0):

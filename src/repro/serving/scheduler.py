@@ -16,6 +16,12 @@ Engine contract (pure JAX, jit-compiled once):
 Fault-tolerance hooks mirror the trainer: the scheduler's request log is
 deterministic and replayable, so a restarted server reconstructs in-flight
 state from (request stream, finished set).
+
+``SpmmWaveServer`` applies the same wave discipline to SpMM serving over
+a hot-swappable ``DistSpmm``/``SpmmSession``: the handle is re-resolved
+only at wave boundaries, which is exactly the granularity at which
+``SpmmSession.replan``'s warm hot-swap is safe — no wave ever straddles
+two plans and none is dropped across a swap.
 """
 from __future__ import annotations
 
@@ -31,7 +37,8 @@ import numpy as np
 from ..models.config import ModelConfig
 from ..models.transformer import decode_step, init_decode_cache
 
-__all__ = ["Request", "ServeStats", "ContinuousBatcher"]
+__all__ = ["Request", "ServeStats", "ContinuousBatcher",
+           "SpmmRequest", "SpmmWaveStats", "SpmmWaveServer"]
 
 
 @dataclasses.dataclass
@@ -55,6 +62,82 @@ class ServeStats:
     @property
     def mean_occupancy(self) -> float:
         return self.occupancy_sum / max(self.decode_steps, 1)
+
+
+@dataclasses.dataclass
+class SpmmRequest:
+    rid: int
+    b: np.ndarray  # [K, N] dense operand
+    # filled by the server
+    output: Optional[np.ndarray] = None
+    wave: Optional[int] = None
+
+
+@dataclasses.dataclass
+class SpmmWaveStats:
+    waves: int = 0
+    served: int = 0
+    swaps: int = 0          # handle identity changed between waves
+    dropped_waves: int = 0  # MUST stay 0: the hot-swap contract
+
+
+class SpmmWaveServer:
+    """Wave-granular SpMM serving over a hot-swappable handle.
+
+    The serving half of ``SpmmSession``'s lifecycle: the handle is
+    re-resolved once per WAVE (a batch of queued requests), never
+    mid-wave — so a ``session.replan`` or ``session.on_resize`` between
+    waves swaps cleanly (old handle finishes its wave, the next wave
+    picks up the warm replacement) and ``dropped_waves`` stays 0 by
+    construction. ``sources``:
+
+      * an ``SpmmSession`` — swaps follow the session lifecycle;
+      * a ``DistSpmm`` handle — static serving, no swaps;
+      * any zero-arg callable returning a handle — custom resolution.
+    """
+
+    def __init__(self, source, max_batch: int = 8):
+        self.source = source
+        self.max_batch = max_batch
+        self.queue: Deque[SpmmRequest] = deque()
+        self.stats = SpmmWaveStats()
+        self._last_handle_id: Optional[int] = None
+
+    def _resolve_handle(self):
+        if callable(getattr(self.source, "handle", None)):
+            return self.source.handle()  # SpmmSession
+        if callable(self.source) and not hasattr(self.source, "plan"):
+            return self.source()  # custom resolver
+        return self.source  # a bare DistSpmm handle
+
+    def submit(self, req: SpmmRequest) -> None:
+        req.output = None
+        self.queue.append(req)
+
+    def run(self, max_waves: int = 10_000) -> SpmmWaveStats:
+        """Drain the queue wave by wave (each wave on ONE handle)."""
+        while self.queue and self.stats.waves < max_waves:
+            handle = self._resolve_handle()
+            if (self._last_handle_id is not None
+                    and id(handle) != self._last_handle_id):
+                self.stats.swaps += 1
+            self._last_handle_id = id(handle)
+            wave = [self.queue.popleft()
+                    for _ in range(min(self.max_batch, len(self.queue)))]
+            try:
+                for req in wave:
+                    req.output = np.asarray(handle(req.b))
+                    req.wave = self.stats.waves
+                    self.stats.served += 1
+            except Exception:
+                # requeue the whole wave so no request is lost, count
+                # the drop, and surface the failure to the operator
+                for req in reversed(wave):
+                    self.queue.appendleft(req)
+                self.stats.dropped_waves += 1
+                raise
+            self.stats.waves += 1
+        return self.stats
 
 
 class ContinuousBatcher:

@@ -71,16 +71,42 @@ def propose_mesh(cfg: ModelConfig, n_devices: int, global_batch: int,
 
 
 class ElasticController:
-    """Drives resize events: drain -> checkpoint -> remesh -> resume."""
+    """Drives resize events: drain -> checkpoint -> remesh -> resume.
+
+    SpMM handles resize through attached ``SpmmSession``s: every census
+    change is forwarded to each session's ``on_resize``, which selects
+    the nearest pre-planned ladder rung — never re-running MWVC — so a
+    remesh costs the sessions only device re-materialization.
+    """
 
     def __init__(self, cfg: ModelConfig, global_batch: int):
         self.cfg = cfg
         self.global_batch = global_batch
         self.current: Optional[MeshPlan] = None
         self.events: List[dict] = []
+        self.spmm_sessions: List[object] = []
+        self._last_census: Optional[int] = None
+
+    def attach_spmm(self, session) -> None:
+        """Subscribe a ``repro.core.SpmmSession`` to census changes."""
+        self.spmm_sessions.append(session)
+
+    def _notify_spmm(self, n_devices: int) -> None:
+        for session in self.spmm_sessions:
+            handle = session.on_resize(n_devices)
+            self.events.append({"census": n_devices, "action": "spmm_rung",
+                                "rung": handle.plan.P,
+                                "ladder": session.ladder})
 
     def on_census(self, n_devices: int) -> Tuple[bool, Optional[MeshPlan]]:
         """Returns (resize_needed, plan). Idempotent for a stable census."""
+        # sessions key on the raw census, NOT the dense mesh shape: a
+        # shrink that leaves the (batch-divisibility-capped) dense mesh
+        # unchanged — or that halts dense training entirely — must still
+        # move SpMM serving off the lost devices
+        if n_devices != self._last_census:
+            self._last_census = n_devices
+            self._notify_spmm(n_devices)
         plan = propose_mesh(self.cfg, n_devices, self.global_batch)
         if plan is None:
             self.events.append({"census": n_devices, "action": "halt",

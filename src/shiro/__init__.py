@@ -3,21 +3,31 @@
     import shiro
     handle = shiro.compile(a, mesh, shiro.SpmmConfig(hier="auto",
                                                      schedule="auto"))
+    session = shiro.SpmmSession.build(a, shiro.Topology.local(8),
+                                      p_ladder=(4, 8))
     c = handle(b)
 
 ``shiro.compile`` is ``repro.compile_spmm``; everything here re-exports
-``repro.core.api`` so downstream code can depend on the short spelling.
+the ``repro`` front door (``repro.core.api`` / ``repro.core.session`` /
+``repro.distributed.topology``) so downstream code can depend on the
+short spelling. ``tests/test_api.py`` pins this parity: every symbol in
+``repro.__all__`` must resolve identically through ``shiro``.
 """
 from repro.core.api import (  # noqa: F401
     DistSpmm, SpmmConfig, compile_spmm, make_spmm_fn,
     register_lowering_hook, unregister_lowering_hook,
 )
+from repro.core.session import SpmmSession  # noqa: F401
+from repro.distributed.topology import Topology, TopologyError  # noqa: F401
 
 compile = compile_spmm  # noqa: A001 — the intended public spelling
 
 __all__ = [
     "DistSpmm",
     "SpmmConfig",
+    "SpmmSession",
+    "Topology",
+    "TopologyError",
     "compile",
     "compile_spmm",
     "make_spmm_fn",

@@ -73,6 +73,21 @@ def test_top_level_and_shiro_aliases():
         assert getattr(shiro, name) is not None, name
 
 
+def test_shiro_namespace_parity():
+    """The facade must track the repro api surface symbol-for-symbol —
+    it silently lagged it between PR 3 and this test existing."""
+    for name in repro.__all__:
+        assert name in shiro.__all__, f"shiro lags repro: missing {name}"
+        assert getattr(shiro, name) is getattr(repro, name), name
+    # the lifecycle surface specifically (the symbols this PR adds)
+    from repro.core.session import SpmmSession
+    from repro.distributed.topology import Topology
+
+    assert shiro.SpmmSession is SpmmSession
+    assert shiro.Topology is Topology
+    assert shiro.compile is repro.compile_spmm
+
+
 # ---------------------------------------------------------------------------
 # config validation
 # ---------------------------------------------------------------------------

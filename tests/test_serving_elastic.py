@@ -1,4 +1,10 @@
-"""Serving scheduler (wave batching) + elastic controller + rmsnorm kernel."""
+"""Serving scheduler (wave batching) + elastic controller + rmsnorm kernel.
+
+Includes the session-lifecycle integration scenario: a wave-granular
+SpMM server rides an ``ElasticController`` through grow -> shrink ->
+drift, every wave's C stays bit-identical to a cold ``compile_spmm`` on
+the pattern/P it was served under, and the hot-swaps drop zero waves.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +14,9 @@ from repro.configs import get_smoke_config
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.models.layers import rms_norm
 from repro.models.transformer import init_params
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.scheduler import (
+    ContinuousBatcher, Request, SpmmRequest, SpmmWaveServer,
+)
 from repro.train.elastic import ElasticController, propose_mesh
 
 
@@ -73,6 +81,89 @@ def test_elastic_controller_remesh_on_loss():
     changed3, plan3 = ctl.on_census(192)
     assert changed3 and plan3 is not None and plan3.size <= 192
     assert len(ctl.events) == 2
+
+
+# ---------------------------------------------------------------------------
+# session lifecycle x wave serving: grow -> shrink -> drift
+# ---------------------------------------------------------------------------
+
+
+def test_wave_server_static_handle(power_law_matrix):
+    from repro.core.api import SpmmConfig, compile_spmm
+
+    a = power_law_matrix()
+    handle = compile_spmm(a, 8, SpmmConfig(schedule="auto"))
+    server = SpmmWaveServer(handle, max_batch=3)
+    b = np.random.default_rng(0).standard_normal((64, 16)).astype(np.float32)
+    for rid in range(7):
+        server.submit(SpmmRequest(rid=rid, b=b))
+    stats = server.run()
+    assert stats.served == 7 and stats.waves == 3  # 3+3+1
+    assert stats.swaps == 0 and stats.dropped_waves == 0
+
+
+def test_grow_shrink_drift_hot_swap_serving(power_law_matrix):
+    """The ISSUE's scenario: waves keep flowing through shrink, grow and
+    a drift replan; each wave's C is bit-identical to a cold compile on
+    the (P, pattern) it was served under; no wave is ever dropped."""
+    from repro.core.api import SpmmConfig, compile_spmm
+    from repro.core.planner import plan_build_count
+    from repro.core.session import SpmmSession
+    from repro.core.sparse import power_law_sparse
+
+    a = power_law_matrix()
+    cfg = SpmmConfig(schedule="auto")
+    session = SpmmSession.build(a, 8, cfg, p_ladder=(4, 8))
+    ctl = ElasticController(get_smoke_config("qwen2-1.5b"), global_batch=8)
+    ctl.attach_spmm(session)
+    ctl.on_census(8)
+    server = SpmmWaveServer(session, max_batch=2)
+    b = np.random.default_rng(1).standard_normal((64, 16)).astype(np.float32)
+
+    def serve_wave(rids):
+        reqs = [SpmmRequest(rid=rid, b=b) for rid in rids]
+        for r in reqs:
+            server.submit(r)
+        server.run()
+        return reqs
+
+    # wave 1: full fleet, original pattern
+    reqs = serve_wave([0, 1])
+    cold_8 = compile_spmm(a, 8, cfg)
+    for r in reqs:
+        np.testing.assert_array_equal(r.output, np.asarray(cold_8(b)))
+
+    # shrink to the P=4 rung — pre-planned, so NO MWVC re-run
+    n0 = plan_build_count()
+    ctl.on_census(5)
+    assert session.current_P == 4 and plan_build_count() == n0
+    reqs = serve_wave([2, 3])
+    cold_4 = compile_spmm(a, 4, cfg)
+    for r in reqs:
+        np.testing.assert_array_equal(r.output, np.asarray(cold_4(b)))
+
+    # grow back to the full fleet
+    n1 = plan_build_count()
+    ctl.on_census(8)
+    assert session.current_P == 8 and plan_build_count() == n1
+    reqs = serve_wave([4, 5])
+    for r in reqs:
+        np.testing.assert_array_equal(r.output, np.asarray(cold_8(b)))
+
+    # the pattern drifts past the threshold: off-path replan, warm swap
+    a_new = power_law_sparse(64, 64, 400, 1.2, seed=91)
+    drift, swapped = session.maybe_replan(a_new)
+    assert swapped and drift > cfg.drift_threshold
+    reqs = serve_wave([6, 7])
+    cold_new = compile_spmm(a_new, 8, cfg)
+    for r in reqs:
+        np.testing.assert_array_equal(r.output, np.asarray(cold_new(b)))
+
+    stats = server.stats
+    assert stats.dropped_waves == 0  # the hot-swap contract
+    assert stats.served == 8 and stats.waves == 4
+    assert stats.swaps == 3  # shrink, grow, drift replan
+    assert session.handle().stats()["drift"] == drift
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,388 @@
+"""SpmmSession + Topology lifecycle (core.session / distributed.topology).
+
+Covers the PR's acceptance bar: ``session.replan()`` hot-swaps to a
+handle whose C is bit-identical to a cold ``compile_spmm`` on the new
+pattern (with the outgoing handle's executable working set warmed
+BEFORE the swap — pinned via ``register_lowering_hook``), and an
+``ElasticController`` resize event resolves to a pre-planned ladder
+rung without re-running MWVC (pinned via ``planner.plan_build_count``).
+Plus: topology resolution/derivation, drift detection thresholds,
+ladder bundle save/load with version stamps, and the friendly
+``DistSpmm.load`` topology errors.
+"""
+import json
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core.api import (
+    DistSpmm, SpmmConfig, compile_spmm, register_lowering_hook,
+    unregister_lowering_hook,
+)
+from repro.core.planner import plan_build_count
+from repro.core.session import SpmmSession
+from repro.core.sparse import pattern_snapshot, power_law_sparse
+from repro.distributed.topology import Topology, TopologyError
+from repro.launch.mesh import make_spmm_mesh
+
+P, N = 8, 16
+
+
+def _b(n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((64, n)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Topology
+# ---------------------------------------------------------------------------
+
+
+def test_topology_resolution_forms():
+    t_int = Topology.resolve(P)
+    assert t_int.P == P and t_int.kind == "local"
+    assert Topology.resolve(t_int) is t_int
+    mesh = make_spmm_mesh(P, groups=2)
+    t_mesh = Topology.resolve(mesh)
+    assert t_mesh.kind == "mesh" and t_mesh.P == P
+    assert t_mesh.tiers == (2, 4)  # two-axis mesh => intrinsic structure
+    with pytest.raises(TypeError, match="cannot resolve a Topology"):
+        Topology.resolve("eight")
+
+
+def test_topology_friendly_device_errors():
+    with pytest.raises(TopologyError, match="needs 99 devices"):
+        Topology.local(99)
+    with pytest.raises(TopologyError, match="cannot narrow"):
+        Topology.local(4).narrow(8)
+
+
+def test_topology_network_derivation():
+    # flat local substrate: no structure => the configured default
+    from repro.core.comm_model import TSUBAME_LIKE
+
+    assert Topology.local(P).network() is TSUBAME_LIKE
+    # a two-axis mesh derives its own two-tier spec; the inner axis is
+    # the fast-tier group
+    net = Topology.from_mesh(make_spmm_mesh(P, groups=2)).network()
+    assert net.group_size == 4 and net.name.startswith("derived-")
+    assert net.bw_intra > net.bw_inter
+
+
+def test_topology_auto_grouping_prefers_intrinsic_tiers():
+    from repro.core.comm_model import TSUBAME_LIKE
+
+    # TSUBAME group_size=4 would guess (2, 4); the mesh's own (4, 2)
+    # structure must win
+    topo = Topology.from_mesh(make_spmm_mesh(P, groups=4))
+    assert topo.auto_grouping(TSUBAME_LIKE) == (4, 2)
+    assert Topology.local(P).auto_grouping(TSUBAME_LIKE) == (2, 4)
+
+
+def test_make_context_accepts_topology():
+    from repro.distributed.context import make_context
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    dist = make_context(Topology.from_mesh(mesh))
+    assert dist.mesh is mesh and dist.model_size == 4
+    with pytest.raises(TopologyError, match="named"):
+        make_context(Topology.local(4))
+
+
+def test_compile_spmm_accepts_topology(power_law_matrix):
+    a = power_law_matrix()
+    h = compile_spmm(a, Topology.local(P), SpmmConfig(schedule="auto"))
+    b = _b()
+    np.testing.assert_allclose(np.asarray(h(b)), a.to_dense() @ b,
+                               rtol=1e-4, atol=1e-4)
+    assert h.stats()["topology"]["kind"] == "local"
+
+
+# ---------------------------------------------------------------------------
+# pattern snapshots / drift
+# ---------------------------------------------------------------------------
+
+
+def test_pattern_snapshot_drift_metric(power_law_matrix):
+    a = power_law_matrix()
+    snap = pattern_snapshot(a)
+    assert snap.drift(a) == 0.0
+    # values don't matter, only coordinates
+    import dataclasses
+
+    reweighted = dataclasses.replace(a, data=a.data * 3.0)
+    assert snap.drift(reweighted) == 0.0
+    other = power_law_sparse(64, 64, 400, 1.2, seed=77)
+    d = snap.drift(other)
+    assert 0.0 < d <= 1.0
+    # disjoint shapes are maximally drifted
+    assert snap.drift(power_law_sparse(32, 32, 100, 1.2, 1)) == 1.0
+
+
+def test_handle_stats_carry_drift(power_law_matrix):
+    a = power_law_matrix()
+    h = compile_spmm(a, P)
+    st = h.stats()
+    assert st["drift"] == 0.0
+    assert st["drift_threshold"] == SpmmConfig().drift_threshold
+    assert st["pattern_nnz"] == pattern_snapshot(a).nnz
+    d = h.drift(power_law_sparse(64, 64, 400, 1.2, seed=77))
+    assert h.stats()["drift"] == d > 0.0
+
+
+def test_config_validates_drift_threshold_and_net():
+    with pytest.raises(ValueError, match="drift_threshold"):
+        SpmmConfig(drift_threshold=1.5)
+    with pytest.raises(ValueError, match="net"):
+        SpmmConfig(net="tsubame")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: replan hot-swap == cold compile, warmed before the swap
+# ---------------------------------------------------------------------------
+
+
+def test_replan_hot_swap_bit_identical_and_warm(power_law_matrix):
+    a = power_law_matrix()
+    session = SpmmSession.build(a, P, SpmmConfig(schedule="auto"))
+    b = _b(seed=3)
+    old = session.handle()
+    old_out = np.asarray(old(b))
+
+    a_new = power_law_sparse(64, 64, 400, 1.2, seed=41)
+    events = []
+    hook = lambda h, key: events.append((h, key))
+    register_lowering_hook(hook)
+    try:
+        swapped = session.replan(a_new)
+        lowered_during_replan = list(events)
+        new_out = np.asarray(session.handle()(b))
+    finally:
+        unregister_lowering_hook(hook)
+
+    # the swap happened and serves the NEW pattern...
+    assert swapped is session.handle() and swapped is not old
+    cold = compile_spmm(a_new, P, SpmmConfig(schedule="auto"))
+    np.testing.assert_array_equal(new_out, np.asarray(cold(b)))
+    # ...the old handle's working set was lowered DURING replan (warm
+    # swap), so the first post-swap call is a pure cache hit
+    assert [k for h, k in lowered_during_replan if h is swapped] == \
+        [(N, "float32", "coo")]
+    assert [k for h, k in events if k not in
+            [k2 for _, k2 in lowered_during_replan]] == []
+    assert swapped.cache_info()["hits"] >= 1
+    # the old handle keeps serving its own (old-pattern) plan
+    np.testing.assert_array_equal(np.asarray(old(b)), old_out)
+    assert session.generation == 1 and session.swaps == 1
+
+
+def test_maybe_replan_thresholds(power_law_matrix):
+    a = power_law_matrix()
+    session = SpmmSession.build(a, P, SpmmConfig(schedule="auto"))
+    h0 = session.handle()
+    # same pattern, reweighted values: drift 0, no replan
+    import dataclasses
+
+    drift, swapped = session.maybe_replan(
+        dataclasses.replace(a, data=a.data * 2.0))
+    assert drift == 0.0 and not swapped and session.handle() is h0
+    assert h0.stats()["drift"] == 0.0
+    # a genuinely different pattern crosses the default threshold
+    a_new = power_law_sparse(64, 64, 400, 1.2, seed=41)
+    drift, swapped = session.maybe_replan(a_new)
+    assert swapped and drift > session.config.drift_threshold
+    assert session.handle() is not h0
+    assert session.handle().stats()["drift"] == drift
+
+
+# ---------------------------------------------------------------------------
+# acceptance: elastic resize resolves to a rung without re-running MWVC
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_resize_selects_rung_without_mwvc(power_law_matrix):
+    from repro.configs import get_smoke_config
+    from repro.train.elastic import ElasticController
+
+    a = power_law_matrix()
+    n0 = plan_build_count()
+    session = SpmmSession.build(a, P, SpmmConfig(schedule="auto"),
+                                p_ladder=(2, 4, 8))
+    assert plan_build_count() - n0 == 3  # one MWVC run per rung, upfront
+    b = _b(seed=5)
+    ref = a.to_dense() @ b
+    np.testing.assert_allclose(np.asarray(session.handle()(b)), ref,
+                               rtol=1e-4, atol=1e-4)
+
+    ctl = ElasticController(get_smoke_config("qwen2-1.5b"), global_batch=8)
+    ctl.attach_spmm(session)
+    n1 = plan_build_count()
+    events = []
+    hook = lambda h, key: events.append(key)
+    register_lowering_hook(hook)
+    try:
+        ctl.on_census(8)      # initial census: rung 8 (already current)
+        ctl.on_census(5)      # shrink: nearest rung is 4
+        assert session.current_P == 4
+        np.testing.assert_allclose(np.asarray(session.handle()(b)), ref,
+                                   rtol=1e-4, atol=1e-4)
+        ctl.on_census(8)      # grow back: rung 8 again
+        assert session.current_P == 8
+        np.testing.assert_allclose(np.asarray(session.handle()(b)), ref,
+                                   rtol=1e-4, atol=1e-4)
+    finally:
+        unregister_lowering_hook(hook)
+    # the pinned promise: resizes re-materialize and re-lower, but NEVER
+    # re-run the MWVC planner
+    assert plan_build_count() == n1
+    assert len(events) >= 1  # fresh rungs do lower their executables
+    rung_events = [e for e in ctl.events if e["action"] == "spmm_rung"]
+    assert [e["rung"] for e in rung_events] == [8, 4, 8]
+
+
+def test_resize_below_ladder_is_friendly(power_law_matrix):
+    session = SpmmSession.build(power_law_matrix(), P,
+                                p_ladder=(4, 8))
+    with pytest.raises(TopologyError, match="no ladder rung fits 2"):
+        session.on_resize(2)
+
+
+def test_ladder_requires_fitting_rung(power_law_matrix):
+    with pytest.raises(TopologyError, match="no ladder rung fits"):
+        SpmmSession.build(power_law_matrix(), 4, p_ladder=(8,))
+
+
+# ---------------------------------------------------------------------------
+# ladder bundle save / load (atomic dir, version stamps)
+# ---------------------------------------------------------------------------
+
+
+def test_session_bundle_roundtrip_bit_identical(tmp_path, power_law_matrix):
+    a = power_law_matrix()
+    session = SpmmSession.build(a, P, SpmmConfig(schedule="auto"),
+                                p_ladder=(4, 8))
+    b = _b(seed=6)
+    out = np.asarray(session.handle()(b))
+
+    path = str(tmp_path / "bundle")
+    session.save(path)
+    assert os.path.exists(os.path.join(path, "session.json"))
+    assert not os.path.exists(path + ".tmp")  # atomic publish
+
+    n0 = plan_build_count()
+    loaded = SpmmSession.load(path, P)
+    assert plan_build_count() == n0  # loading never re-plans
+    assert loaded.ladder == (4, 8)
+    np.testing.assert_array_equal(np.asarray(loaded.handle()(b)), out)
+    # loaded sessions keep the full lifecycle: resize + replan
+    loaded.on_resize(4)
+    np.testing.assert_allclose(np.asarray(loaded.handle()(b)),
+                               a.to_dense() @ b, rtol=1e-4, atol=1e-4)
+    a_new = power_law_sparse(64, 64, 400, 1.2, seed=41)
+    loaded.replan(a_new)
+    np.testing.assert_allclose(np.asarray(loaded.handle()(b)),
+                               a_new.to_dense() @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_session_load_rejects_unknown_version(tmp_path, power_law_matrix):
+    session = SpmmSession.build(power_law_matrix(), P)
+    path = str(tmp_path / "bundle")
+    session.save(path)
+    meta_path = os.path.join(path, "session.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["version"] = 99
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="version 99.*Re-save"):
+        SpmmSession.load(path, P)
+
+
+def test_session_load_rejects_non_bundle(tmp_path):
+    with pytest.raises(ValueError, match="no session.json"):
+        SpmmSession.load(str(tmp_path / "nope"), P)
+
+
+# ---------------------------------------------------------------------------
+# DistSpmm.load: version stamp + friendly topology errors (satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_save_version_stamp_roundtrip(tmp_path, power_law_matrix):
+    from repro.core.api import _SAVE_VERSION
+
+    a = power_law_matrix()
+    h = compile_spmm(a, P)
+    path = str(tmp_path / "plan.shiro")
+    h.save(path)
+    with open(path, "rb") as f:
+        payload = pickle.load(f)
+    assert payload["version"] == _SAVE_VERSION
+    assert payload["snapshot"].fingerprint == h.snapshot.fingerprint
+    loaded = DistSpmm.load(path, P)
+    assert loaded.snapshot.fingerprint == h.snapshot.fingerprint
+    b = _b(seed=7)
+    np.testing.assert_array_equal(np.asarray(loaded(b)),
+                                  np.asarray(h(b)))
+
+
+def test_load_rejects_unknown_version_actionably(tmp_path, power_law_matrix):
+    h = compile_spmm(power_law_matrix(), P)
+    path = str(tmp_path / "plan.shiro")
+    payload = h.save_payload()
+    payload["version"] = 999
+    with open(path, "wb") as f:
+        pickle.dump(payload, f)
+    with pytest.raises(ValueError, match="version 999.*re-run "
+                                         "compile_spmm"):
+        DistSpmm.load(path, P)
+
+
+def test_load_accepts_legacy_v1_payload(tmp_path, power_law_matrix):
+    """PR-3 era files (no snapshot) still load; drift asks for a
+    recompile instead of crashing."""
+    h = compile_spmm(power_law_matrix(), P)
+    path = str(tmp_path / "plan.shiro")
+    payload = h.save_payload()
+    payload["version"] = 1
+    del payload["snapshot"]
+    with open(path, "wb") as f:
+        pickle.dump(payload, f)
+    loaded = DistSpmm.load(path, P)
+    b = _b(seed=8)
+    np.testing.assert_array_equal(np.asarray(loaded(b)), np.asarray(h(b)))
+    with pytest.raises(ValueError, match="no pattern snapshot"):
+        loaded.drift(power_law_matrix())
+
+
+@pytest.mark.parametrize("kind", ["flat", "hier"])
+def test_load_mesh_mismatch_is_friendly(tmp_path, power_law_matrix, kind):
+    """The old failure mode was an opaque shard_map trace (flat) or a
+    deep device-count error (hier); now it's a P-vs-P message."""
+    cfg = SpmmConfig(hier=(2, 4) if kind == "hier" else None,
+                     schedule="single")
+    h = compile_spmm(power_law_matrix(), P, cfg)
+    path = str(tmp_path / "plan.shiro")
+    h.save(path)
+    with pytest.raises(ValueError, match="planned for P=8.*has P=4"):
+        DistSpmm.load(path, 4)
+    with pytest.raises(ValueError, match="planned for P=8.*has P=4"):
+        DistSpmm.load(path, make_spmm_mesh(4))
+
+
+def test_load_accepts_any_matching_topology(tmp_path, power_law_matrix):
+    """Any Topology with matching P works — including a mesh whose axis
+    layout differs from the planning-time one."""
+    a = power_law_matrix()
+    h = compile_spmm(a, P, SpmmConfig(schedule="auto"))
+    path = str(tmp_path / "plan.shiro")
+    h.save(path)
+    b = _b(seed=9)
+    expect = np.asarray(h(b))
+    for where in (P, None, Topology.local(P), make_spmm_mesh(P),
+                  make_spmm_mesh(P, groups=2)):
+        loaded = DistSpmm.load(path, where)
+        np.testing.assert_array_equal(np.asarray(loaded(b)), expect)
