@@ -7,6 +7,16 @@ executor, and the front door's autotuned execution-mode decision. The
 ``modeled_time`` field of each K row is the BEST-mode total, so the CI
 bench gate (``run.py --compare``) trips when either execution mode's
 model regresses; ``padded_rows`` rides along for the same reason.
+
+Two newer row families:
+
+* ``overlap/<ds>/alloc`` — per-device ``total_allocation_size`` of the
+  compiled executable with B-buffer donation on vs off (stamped with
+  the jax version; the gate only compares it under the same jax).
+* ``overlap/<ds>/autotune`` — emitted only when ``REPRO_AUTOTUNE_CACHE``
+  is set: a measured-autotune build whose decisions land in (or replay
+  from) the on-disk cache, so a CI run leaves a cache artifact behind.
+  Timing-dependent fields are deliberately non-gated.
 """
 from __future__ import annotations
 
@@ -71,8 +81,11 @@ def run(datasets=None) -> list:
         rows.append(fmt_row(f"overlap/{ds}/measured-overlap", us_ov,
                             "mode=overlap;K=4"))
 
-        # what the front door decides for this matrix
-        h = compile_spmm(a, P, SpmmConfig(schedule="auto", overlap="auto"))
+        # what the front door decides for this matrix (model-only:
+        # measure=False keeps this row deterministic even when an
+        # autotune cache dir is configured in the environment)
+        h = compile_spmm(a, P, SpmmConfig(schedule="auto", overlap="auto",
+                                          measure=False))
         st = h.stats()
         rows.append(fmt_row(
             f"overlap/{ds}/chosen", 0.0,
@@ -80,4 +93,37 @@ def run(datasets=None) -> list:
             f"K={st['schedule_K']};"
             f"modeled_time_staged={st['modeled_time_staged']:.3e};"
             f"modeled_time_overlap={st['modeled_time_overlap']:.3e}"))
+
+        # per-device allocation of the compiled executable, donation on
+        # vs off (deterministic per jax version; the gate stamps "jax"
+        # and only compares under a matching version)
+        import jax as _jax
+
+        alloc = {}
+        for tag, donate in (("", True), ("_undonated", False)):
+            hd = compile_spmm(a, P, SpmmConfig(schedule=4, overlap=False,
+                                               measure=False, donate=donate))
+            hd.lowered_hlo(N_DENSE)  # compile once so memory is recorded
+            alloc[tag] = hd.stats()["total_allocation_size"]
+        rows.append(fmt_row(
+            f"overlap/{ds}/alloc", 0.0,
+            f"total_allocation_size={alloc['']};"
+            f"total_allocation_size_undonated={alloc['_undonated']};"
+            f"jax={_jax.__version__}"))
+
+        # measured autotuning, only when a cache dir is configured —
+        # populates (or replays) the on-disk cache CI uploads as an
+        # artifact; measured fields vary run to run and are not gated
+        from repro.core import autotune
+
+        if autotune.cache_dir() is not None:
+            hm = compile_spmm(a, P, SpmmConfig(schedule="auto",
+                                               overlap="auto"))
+            sm = hm.stats()
+            rows.append(fmt_row(
+                f"overlap/{ds}/autotune", 0.0,
+                f"decision_source={sm['decision_source']};"
+                f"kind={sm['schedule_kind']};K={sm['schedule_K']};"
+                f"overlap={sm['overlap']};"
+                f"measured_time={sm['measured_time'] or 0.0:.3e}"))
     return rows

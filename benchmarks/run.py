@@ -30,9 +30,13 @@ Flags:
                   front door decided for that matrix.
   --compare PATH  regression GATE: compare this run's records against a
                   committed baseline (same --json format) and FAIL when
-                  any deterministic model field (padded_rows /
-                  modeled_time) exceeds baseline · (1 + --tolerance), or
-                  when a baseline record is missing from this run.
+                  any deterministic field (padded_rows / modeled_time /
+                  total_allocation_size, the last only under the
+                  baseline's recorded jax version) exceeds
+                  baseline · (1 + --tolerance), when a baseline record
+                  is missing from this run (each missing record is
+                  named), or when the baseline itself carries no usable
+                  records.
   --tolerance F   relative slack for --compare (default 0.05).
 
 Exit codes (so CI can tell "regressed" from "crashed"):
@@ -49,9 +53,18 @@ import traceback
 EXIT_REGRESSED = 1
 EXIT_CRASHED = 2
 
-# deterministic model outputs the --compare gate checks (wall times vary
-# run to run and are tracked, not gated)
-GATE_FIELDS = ("padded_rows", "modeled_time")
+# deterministic outputs the --compare gate checks (wall times vary run
+# to run and are tracked, not gated). total_allocation_size is an XLA
+# property of the compiled executable — deterministic per jax version,
+# so it is only gated when the baseline record's "jax" stamp matches
+# the running version (see compare_records).
+GATE_FIELDS = ("padded_rows", "modeled_time", "total_allocation_size")
+
+
+def _jax_version() -> str:
+    import jax
+
+    return jax.__version__
 
 
 def _parse_derived(derived: str) -> dict:
@@ -93,9 +106,13 @@ def compare_records(current: list, baseline: list,
     """
     cur = {r["bench"]: r for r in current if "error" not in r}
     violations = []
-    for base in baseline:
-        if "error" in base:
-            continue
+    gated = [r for r in baseline if "error" not in r]
+    if not gated:
+        # an empty/all-error baseline silently passing would mean the
+        # gate checks nothing; that's a failure of the gate, not a pass
+        return ["baseline contains no usable records (empty or "
+                "all-error); regenerate benchmarks/baseline_smoke.json"]
+    for base in gated:
         name = base["bench"]
         rec = cur.get(name)
         if rec is None:
@@ -104,6 +121,9 @@ def compare_records(current: list, baseline: list,
         for field in GATE_FIELDS:
             if field not in base:
                 continue
+            if (field == "total_allocation_size"
+                    and base.get("jax") != _jax_version()):
+                continue  # cross-jax-version allocations aren't comparable
             try:
                 b, c = float(base[field]), float(rec.get(field, "nan"))
             except (TypeError, ValueError):

@@ -12,6 +12,8 @@ paper-branded alias lives in the sibling ``shiro`` package
 (``shiro.compile``). Everything else stays addressed by subpackage
 (``repro.core``, ``repro.models``, ...).
 """
+__version__ = "0.6.0"  # stamped into autotune cache keys (core.autotune)
+
 __all__ = ["SpmmConfig", "DistSpmm", "compile_spmm", "SpmmSession",
            "Topology"]
 

@@ -54,6 +54,10 @@ from .api import (
     SpmmConfig, DistSpmm, compile_spmm, make_spmm_fn,
     register_lowering_hook, unregister_lowering_hook,
 )
+from .autotune import (
+    AutotuneCache, measurement_enabled,
+    register_profile_hook, unregister_profile_hook,
+)
 from .session import LadderRung, SpmmSession
 
 __all__ = [
@@ -82,5 +86,7 @@ __all__ = [
     "hier_exec_arrays", "flat_spmm", "hier_spmm", "coo_spmm_local",
     "SpmmConfig", "DistSpmm", "compile_spmm", "make_spmm_fn",
     "register_lowering_hook", "unregister_lowering_hook",
+    "AutotuneCache", "measurement_enabled",
+    "register_profile_hook", "unregister_profile_hook",
     "SpmmSession", "LadderRung",
 ]

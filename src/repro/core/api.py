@@ -67,6 +67,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from ..distributed.topology import Topology
+from ..launch.hlo_analysis import executable_memory
 from .comm_model import (
     NetworkSpec, choose_hier_schedule, choose_schedule,
     modeled_time, modeled_time_hier, modeled_time_hier_overlap,
@@ -158,6 +159,28 @@ class SpmmConfig:
                        snapshot — ``SpmmSession.maybe_replan`` re-plans
                        past it, and ``h.stats()["drift"]`` reports the
                        last measured value either way.
+    ``donate``         donate the B operand buffer to the executable so
+                       XLA reuses its allocation for receive slabs / the
+                       C accumulator (C bit-identical either way). Only
+                       applied when the operand is square (C then has
+                       B's exact row count, so the alias is always
+                       usable); the handle copies B defensively when a
+                       caller's on-sharding device array would otherwise
+                       be consumed.
+    ``measure``        timed candidate profiling on top of the α-β model:
+                       ``True`` profiles the model's top
+                       ``profile_topk`` candidates with real executions,
+                       ``False`` stays model-only, ``"auto"`` (default)
+                       measures iff an autotune cache directory is
+                       configured (env ``REPRO_AUTOTUNE_CACHE``).
+                       ``REPRO_MEASURE=0``/``1`` overrides either way.
+                       See ``core.autotune``.
+    ``memory_budget``  per-device byte budget; ``SpmmSession.build``
+                       skips ladder rungs whose estimated (or measured)
+                       executable allocation exceeds it.
+    ``profile_topk``   how many model-ranked candidates to time-profile.
+    ``profile_iters``  timed runs per candidate (median is kept).
+    ``profile_warmup`` discarded warmup runs per candidate.
     """
 
     strategy: Strategy = "joint"
@@ -171,6 +194,12 @@ class SpmmConfig:
     n_dense_hint: int = 64
     k_max: int = 4
     drift_threshold: float = 0.1
+    donate: bool = True
+    measure: Union[str, bool] = "auto"
+    memory_budget: Optional[int] = None
+    profile_topk: int = 3
+    profile_iters: int = 3
+    profile_warmup: int = 1
 
     def __post_init__(self) -> None:
         if isinstance(self.schedule, bool) or not (
@@ -197,6 +226,20 @@ class SpmmConfig:
             raise ValueError(
                 f"drift_threshold is a Jaccard distance in [0, 1]; "
                 f"got {self.drift_threshold!r}")
+        if self.measure not in ("auto", True, False):
+            raise ValueError(
+                f"measure must be 'auto', True or False; "
+                f"got {self.measure!r}")
+        if self.memory_budget is not None and int(self.memory_budget) <= 0:
+            raise ValueError(
+                f"memory_budget is a per-device byte count > 0 (or None); "
+                f"got {self.memory_budget!r}")
+        if int(self.profile_topk) < 1 or int(self.profile_iters) < 1 \
+                or int(self.profile_warmup) < 0:
+            raise ValueError(
+                f"profiling needs topk >= 1, iters >= 1, warmup >= 0; got "
+                f"topk={self.profile_topk!r} iters={self.profile_iters!r} "
+                f"warmup={self.profile_warmup!r}")
 
     def backend_names(self) -> Tuple[str, ...]:
         return tuple(get_backend(spec).name for spec in self.backends)
@@ -253,6 +296,7 @@ class DistSpmm:
         # compile_spmm, rides through save/load inside ``decisions``)
         self.overlap = bool(self.decisions.get("overlap", False))
         self.default_backend = (config.default_backend
+                                or self.decisions.get("backend")
                                 or config.backend_names()[0])
         if self.default_backend not in self.ex.backends:
             raise ValueError(
@@ -260,16 +304,32 @@ class DistSpmm:
                 f"prepared backends {self.ex.backends}")
         # (n_cols, dtype_name, backend) -> compiled executable
         self._executables: Dict[Tuple[int, str, str], Any] = {}
+        # (n_cols, dtype_name, backend) -> executable_memory() profile
+        self._memory: Dict[Tuple[int, str, str], Dict[str, int]] = {}
         self.lowerings: List[Tuple[int, str, str]] = []
         self.cache_hits = 0
+        self.values_refreshes = 0
         # B is row-sharded over every mesh axis; pinning it at lowering
         # time lets the AOT executables accept any caller layout (we
         # reshard on call instead of failing the dispatch-time check)
         if hier is not None:
             spec = PartitionSpec(tuple(self.axis_kwargs.values()))
+            ex_spec = PartitionSpec(*self.axis_kwargs.values())
         else:
             spec = PartitionSpec(self.axis_kwargs["axis"])
+            ex_spec = PartitionSpec(self.axis_kwargs["axis"])
         self._in_sharding = NamedSharding(self.mesh, spec)
+        # exec-plan arrays ride into the executables as ARGUMENTS, not
+        # baked constants: every leaf leads with the process axes ([P,...]
+        # flat, [G,L,...] hier), so one sharding covers the whole pytree.
+        # Same-pattern value refreshes then swap arrays under the compiled
+        # code instead of re-lowering (see ``refresh_values``).
+        self._ex_sharding = NamedSharding(self.mesh, ex_spec)
+        self._ex_dev: Optional[Union[FlatExecPlan, HierExecPlan]] = None
+        # B-buffer donation is only always-usable when C has B's exact
+        # geometry (square operand) — skip otherwise rather than emit
+        # unusable-donation warnings on every call
+        self._donate = bool(config.donate) and plan.shape[0] == plan.shape[1]
 
     # ----- execution ---------------------------------------------------
 
@@ -295,18 +355,34 @@ class DistSpmm:
         return flat_spmm(self.ex, b, self.mesh, backend=backend,
                          overlap=self.overlap, **self.axis_kwargs)
 
+    def _device_ex(self) -> Union[FlatExecPlan, HierExecPlan]:
+        """The exec-plan pytree committed onto the mesh (lazy, cached)."""
+        if self._ex_dev is None:
+            self._ex_dev = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x, self._ex_sharding), self.ex)
+        return self._ex_dev
+
     def _executable(self, n_cols: int, dtype, backend: str):
         key = (int(n_cols), jnp.dtype(dtype).name, backend)
         compiled = self._executables.get(key)
         if compiled is not None:
             self.cache_hits += 1
             return compiled
-        fn = jax.jit(lambda b: self._raw_call(b, backend),
-                     in_shardings=self._in_sharding)
+        if self.hier is not None:
+            def call(ex, b):
+                return hier_spmm(ex, b, self.mesh, backend=backend,
+                                 overlap=self.overlap, **self.axis_kwargs)
+        else:
+            def call(ex, b):
+                return flat_spmm(ex, b, self.mesh, backend=backend,
+                                 overlap=self.overlap, **self.axis_kwargs)
+        fn = jax.jit(call, donate_argnums=(1,) if self._donate else ())
         sds = jax.ShapeDtypeStruct((self.plan.shape[1], int(n_cols)),
-                                   jnp.dtype(dtype))
-        compiled = fn.lower(sds).compile()
+                                   jnp.dtype(dtype),
+                                   sharding=self._in_sharding)
+        compiled = fn.lower(self._device_ex(), sds).compile()
         self._executables[key] = compiled
+        self._memory[key] = executable_memory(compiled)
         self.lowerings.append(key)
         for hook in list(_LOWERING_HOOKS):
             hook(self, key)
@@ -317,11 +393,17 @@ class DistSpmm:
         name = self._backend_name(backend)
         if _is_tracer(b):
             return self._raw_call(b, name)
+        b_in = b
         if self.topology is not None:
             b = self.topology.put_global(b, self._in_sharding)
         else:
             b = jax.device_put(jnp.asarray(b), self._in_sharding)
-        return self._executable(b.shape[1], b.dtype, name)(b)
+        fn = self._executable(b.shape[1], b.dtype, name)
+        if self._donate and b is b_in:
+            # the caller handed us an already-placed device array; donating
+            # it would consume THEIR buffer — donate a private copy instead
+            b = b.copy()
+        return fn(self._device_ex(), b)
 
     def warm_from(self, other: "DistSpmm") -> int:
         """Pre-lower every executable ``other`` has served.
@@ -338,6 +420,48 @@ class DistSpmm:
                 self._executable(n_cols, dtype_name, backend)
                 warmed += 1
         return warmed
+
+    def refresh_values(self, *, plan: SpmmPlan, hier: Optional[HierPlan],
+                       schedule: CommSchedule, decisions: Dict[str, Any],
+                       snapshot: Optional[PatternSnapshot]) -> bool:
+        """Swap in same-pattern exec arrays, keeping compiled executables.
+
+        The values-only half of a replan: the sparsity PATTERN (and with
+        it the plan structure, schedule and layouts) is unchanged, only
+        the nonzero values moved. The compiled executables take the exec
+        arrays as runtime arguments, so they stay valid verbatim — this
+        rebuilds the host/device exec arrays from the new plan in place
+        and pays zero re-lowering. Returns False without touching the
+        handle when the new plan's geometry doesn't match after all
+        (caller should fall back to a full replan / hot swap).
+        """
+        overlap = bool(decisions.get("overlap", False))
+        if (overlap != self.overlap
+                or (hier is None) != (self.hier is None)):
+            return False
+        if hier is not None:
+            new_ex = hier_exec_arrays(hier, backends=self.config.backends,
+                                      schedule=schedule,
+                                      overlap_layouts=overlap)
+        else:
+            new_ex = flat_exec_arrays(plan, backends=self.config.backends,
+                                      schedule=schedule,
+                                      overlap_layouts=overlap)
+        old_leaves = jax.tree_util.tree_leaves(self.ex)
+        new_leaves = jax.tree_util.tree_leaves(new_ex)
+        if (new_ex.backends != self.ex.backends
+                or len(old_leaves) != len(new_leaves)
+                or any(o.shape != n.shape or o.dtype != n.dtype
+                       for o, n in zip(old_leaves, new_leaves))):
+            return False
+        self.plan, self.hier, self.schedule = plan, hier, schedule
+        self.decisions = dict(decisions)
+        self.ex = new_ex
+        self._ex_dev = None  # re-placed lazily; executables stay cached
+        self.snapshot = snapshot
+        self.last_drift = 0.0
+        self.values_refreshes += 1
+        return True
 
     def lowered_hlo(self, n_cols: Optional[int] = None, dtype=jnp.float32,
                     backend: Optional[BackendSpec] = None) -> str:
@@ -385,7 +509,17 @@ class DistSpmm:
             cache=self.cache_info(),
             drift=self.last_drift,
             drift_threshold=self.config.drift_threshold,
+            donated_buffers=("b",) if self._donate else (),
+            values_refreshes=self.values_refreshes,
         )
+        out.setdefault("decision_source", "model")
+        out.setdefault("measured_time", None)
+        # prefer what the compiled executables actually pin over the
+        # profiling-time record riding in ``decisions``
+        mem = [m["total_allocation_size"] for m in self._memory.values()
+               if m.get("total_allocation_size")]
+        out["total_allocation_size"] = (
+            max(mem) if mem else self.decisions.get("total_allocation_size"))
         if self.snapshot is not None:
             out["pattern_nnz"] = self.snapshot.nnz
             out["pattern_fingerprint"] = self.snapshot.fingerprint[:12]
@@ -523,6 +657,44 @@ def _materialize(config: SpmmConfig, plan: SpmmPlan,
                     decisions=decisions, snapshot=snapshot, topology=topo)
 
 
+def _candidate_schedule(plan: SpmmPlan, hier: Optional[HierPlan],
+                        kind: str, K: Optional[int]) -> CommSchedule:
+    """Deterministically (re)build one candidate's schedule object.
+
+    Shared between the model sweep and ``core.autotune`` — a cached
+    measured decision replays through here, so cache hits reproduce the
+    exact schedule the profiled run used.
+    """
+    if hier is not None:
+        return (single_round_hier_schedule(hier) if kind == "single"
+                else build_hier_comm_schedule(hier, K=int(K)))
+    return (single_round_schedule(plan) if kind == "single"
+            else build_comm_schedule(plan, K=int(K)))
+
+
+def _schedule_fields(plan: SpmmPlan, hier: Optional[HierPlan],
+                     schedule: CommSchedule, n_hint: int,
+                     net: NetworkSpec) -> Dict[str, float]:
+    """The three modeled-time decision fields for one candidate."""
+    if hier is not None:
+        return {
+            "modeled_time_schedule": modeled_time_hier_schedule(
+                schedule, n_hint, net),
+            "modeled_time_staged": modeled_time_hier_staged(
+                hier, schedule, n_hint, net),
+            "modeled_time_overlap": modeled_time_hier_overlap(
+                hier, schedule, n_hint, net),
+        }
+    return {
+        "modeled_time_schedule": modeled_time_schedule(
+            plan, schedule, n_hint, net),
+        "modeled_time_staged": modeled_time_staged(
+            plan, schedule, n_hint, net),
+        "modeled_time_overlap": modeled_time_overlap(
+            plan, schedule, n_hint, net),
+    }
+
+
 def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
                    topo: Topology) -> Tuple[SpmmPlan, Optional[HierPlan],
                                             CommSchedule, Dict[str, Any]]:
@@ -545,6 +717,7 @@ def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
 
     # ----- flat vs hierarchical ---------------------------------------
     hier: Optional[HierPlan] = None
+    hier_cand: Optional[HierPlan] = None
     if config.hier is not None:
         if config.hier == "auto":
             gl = (topo.auto_grouping(net) if topo.P == P
@@ -555,13 +728,13 @@ def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
             G, L = gl
             if G * L != P:
                 raise ValueError(f"hier=({G},{L}) incompatible with P={P}")
-            cand = build_hier_plan(plan, G, L, pad_to=config.pad_to)
-            t_hier = modeled_time_hier(cand, n_hint, net)
+            hier_cand = build_hier_plan(plan, G, L, pad_to=config.pad_to)
+            t_hier = modeled_time_hier(hier_cand, n_hint, net)
             decisions["modeled_time_hier"] = t_hier
             decisions["hier_candidate"] = (G, L)
             if config.hier != "auto" or \
                     t_hier < decisions["modeled_time_flat"]:
-                hier = cand
+                hier = hier_cand
 
     # ----- communication schedule + execution mode --------------------
     # The "auto" schedule sweep co-optimizes K with the execution mode
@@ -579,10 +752,6 @@ def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
             schedule, _, _ = choose_hier_schedule(hier, n_hint, net,
                                                   k_max=config.k_max,
                                                   overlap=config.overlap)
-        decisions["modeled_time_schedule"] = modeled_time_hier_schedule(
-            schedule, n_hint, net)
-        t_staged = modeled_time_hier_staged(hier, schedule, n_hint, net)
-        t_overlap = modeled_time_hier_overlap(hier, schedule, n_hint, net)
     else:
         if config.schedule == "single":
             schedule = single_round_schedule(plan)
@@ -595,20 +764,30 @@ def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
             schedule, _, _ = choose_schedule(plan, n_hint, net,
                                              k_max=config.k_max,
                                              overlap=config.overlap)
-        decisions["modeled_time_schedule"] = modeled_time_schedule(
-            plan, schedule, n_hint, net)
-        t_staged = modeled_time_staged(plan, schedule, n_hint, net)
-        t_overlap = modeled_time_overlap(plan, schedule, n_hint, net)
 
-    decisions["modeled_time_staged"] = t_staged
-    decisions["modeled_time_overlap"] = t_overlap
+    fields = _schedule_fields(plan, hier, schedule, n_hint, net)
+    decisions.update(fields)
     use_overlap = False
     if schedule.kind == "bucketed":
         if config.overlap is True:
             use_overlap = True
         elif config.overlap == "auto":
-            use_overlap = t_overlap < t_staged
+            use_overlap = (fields["modeled_time_overlap"]
+                           < fields["modeled_time_staged"])
     decisions["overlap"] = use_overlap
+    decisions["decision_source"] = "model"
+
+    # ----- measured overlay (timed profiling / on-disk cache) ---------
+    # Only when measurement is enabled AND the plan targets THIS
+    # substrate: a ladder rung with P != topo.P has no devices to time
+    # on, and multi-controller fleets can't profile from one process.
+    from . import autotune as _autotune
+
+    if (_autotune.measurement_enabled(config) and topo.P == P
+            and not topo.is_multiprocess):
+        plan, hier, schedule, decisions = _autotune.measured_decide(
+            a, P, config, topo, plan=plan, hier=hier,
+            hier_cand=hier_cand, schedule=schedule, decisions=decisions)
 
     return plan, hier, schedule, decisions
 

@@ -278,17 +278,37 @@ class BsrBackend:
         The staged kernel folds one stored block per t step into the
         output tile; summing a whole segment before adding it to ``acc``
         would regroup that chain (``acc + (c₁ + c₂)`` vs
-        ``(acc + c₁) + c₂``) and drift by an ulp. Chaining one t slot at
-        a time keeps every addition in the staged order, so the Pallas
-        and interpret paths stay bit-identical (``impl="ref"`` reduces
-        its einsum jointly over (t, k) and is only allclose here).
+        ``(acc + c₁) + c₂``) and drift by an ulp. The accumulator-operand
+        kernel (``bsr_spmm_acc_pallas``) seeds its output tile with
+        ``acc`` and folds the segment's slots in ascending t order — the
+        exact chain, in ONE kernel launch whose accumulator buffer is
+        input/output-aliased instead of freshly allocated per slot
+        (``impl="ref"`` replays the chain slot-by-slot through the jnp
+        oracle and is only allclose against the kernel paths).
         """
         cols, blocks = piece["block_cols"], piece["blocks"]
-        for t in range(cols.shape[1]):
-            step = {"block_cols": cols[:, t:t + 1],
-                    "blocks": blocks[:, t:t + 1]}
-            acc = acc + self.compute(step, b_prefix, acc.shape[0])
-        return acc
+        if self.impl == "ref":
+            for t in range(cols.shape[1]):
+                step = {"block_cols": cols[:, t:t + 1],
+                        "blocks": blocks[:, t:t + 1]}
+                acc = acc + self.compute(step, b_prefix, acc.shape[0])
+            return acc
+        from ..kernels.bsr_spmm import bsr_spmm_acc_pallas
+
+        mb, _, bm, bk = blocks.shape
+        k, n = b_prefix.shape
+        kb = _round_up(k, bk) // bk
+        n_pad = _round_up(n, self.bn)
+        b_p = jnp.pad(b_prefix, ((0, kb * bk - k), (0, n_pad - n)))
+        m_out = acc.shape[0]
+        acc_p = jnp.pad(acc.astype(jnp.float32),
+                        ((0, mb * bm - m_out), (0, n_pad - n)))
+        interpret = self.interpret
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        out = bsr_spmm_acc_pallas(cols, blocks, b_p, acc_p, bn=self.bn,
+                                  interpret=bool(interpret))
+        return out[:m_out, :n].astype(b_prefix.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -92,6 +92,10 @@ class SpmmSession:
         self.generation = generation
         self.replans = 0
         self.swaps = 0
+        self.values_refreshes = 0
+        # rungs build() dropped for exceeding config.memory_budget:
+        # P -> estimated/measured per-device bytes
+        self.skipped_rungs: Dict[int, int] = {}
         self.events: List[dict] = []
 
     # ----- construction ------------------------------------------------
@@ -123,13 +127,40 @@ class SpmmSession:
                 f"P={topo.P}; include a rung <= {topo.P}")
         snapshot = pattern_snapshot(a)
         rungs: Dict[int, LadderRung] = {}
+        skipped: Dict[int, int] = {}
+        budget = config.memory_budget
         for P in ladder:
             plan, hier, schedule, decisions = _plan_and_tune(
                 a, P, config, topo)
+            if budget is not None:
+                from .autotune import rung_device_bytes
+
+                need = rung_device_bytes(plan, schedule, decisions, config)
+                if need > int(budget):
+                    skipped[P] = int(need)
+                    continue
             rungs[P] = LadderRung(P, _rung_payload(
                 config, plan, hier, schedule, decisions, snapshot))
-        return cls(config=config, topology=topo, rungs=rungs,
-                   current_P=current, snapshot=snapshot, operand=a)
+        if not rungs:
+            detail = ", ".join(f"P={p}: ~{b} B" for p, b in skipped.items())
+            raise TopologyError(
+                f"every ladder rung exceeds memory_budget={budget} bytes "
+                f"per device ({detail}); raise the budget or pick rungs "
+                f"with a smaller per-device footprint")
+        current = cls._nearest_rung(tuple(rungs), topo.P)
+        if current is None:
+            raise TopologyError(
+                f"no within-budget ladder rung fits the topology: kept "
+                f"{tuple(rungs)}, skipped {tuple(skipped)} (over "
+                f"memory_budget={budget}), P={topo.P}")
+        session = cls(config=config, topology=topo, rungs=rungs,
+                      current_P=current, snapshot=snapshot, operand=a)
+        session.skipped_rungs = skipped
+        if skipped:
+            session.events.append({"action": "budget_skip",
+                                   "skipped": dict(skipped),
+                                   "budget": int(budget)})
+        return session
 
     @staticmethod
     def _nearest_rung(ladder: Sequence[int], n: int) -> Optional[int]:
@@ -194,7 +225,17 @@ class SpmmSession:
         snap_new = pattern_snapshot(a_new)  # once; drift + replan reuse it
         d = self.drift(snap_new)
         if d <= self.config.drift_threshold:
-            self.events.append({"action": "drift_ok", "drift": d})
+            old_digest = getattr(self.snapshot, "values_digest", None)
+            if (d == 0.0 and old_digest is not None
+                    and snap_new.values_digest is not None
+                    and snap_new.values_digest != old_digest):
+                # same pattern, new nonzero VALUES: the compiled
+                # executables stay valid (exec arrays are runtime
+                # arguments) — refresh arrays in place, zero re-lowering
+                self._refresh_values(a_new, snap_new)
+                self.events.append({"action": "values_refresh", "drift": d})
+            else:
+                self.events.append({"action": "drift_ok", "drift": d})
             return d, False
         self.events.append({"action": "drift_replan", "drift": d})
         self.replan(a_new, _snapshot=snap_new)
@@ -238,6 +279,35 @@ class SpmmSession:
                             "rungs": list(targets),
                             "generation": self.generation})
         return handle
+
+    def _refresh_values(self, a_new: CSRMatrix,
+                        snap_new: PatternSnapshot) -> None:
+        """Carry compiled executables across a values-only operand update.
+
+        The pattern digest is unchanged, so every rung's plan STRUCTURE
+        (cover, schedule, layouts) is reproduced identically by
+        ``_plan_and_tune`` — only the packed nonzero values differ.
+        Materialized handles keep their identity and their whole
+        executable cache (``DistSpmm.refresh_values`` swaps the exec
+        arrays under the compiled code); payloads are rebuilt so lazily
+        materialized rungs also pick up the new values. Falls back to
+        dropping a handle (lazy re-materialization, which re-lowers)
+        only if a rung's refreshed geometry surprisingly mismatches.
+        """
+        self.snapshot = snap_new
+        self._operand = a_new
+        for P, rung in sorted(self._rungs.items()):
+            plan, hier, schedule, decisions = _plan_and_tune(
+                a_new, P, self.config, self.topology)
+            rung.payload = _rung_payload(self.config, plan, hier, schedule,
+                                         decisions, snap_new)
+            if rung.handle is not None:
+                ok = rung.handle.refresh_values(
+                    plan=plan, hier=hier, schedule=schedule,
+                    decisions=decisions, snapshot=snap_new)
+                if not ok:  # pragma: no cover — same-pattern plans match
+                    rung.handle = None
+        self.values_refreshes += 1
 
     def _replan_rung(self, P: int, warm: bool) -> None:
         """Rebuild one rung against the session operand + snapshot."""
@@ -306,6 +376,8 @@ class SpmmSession:
             "generation": self.generation,
             "replans": self.replans,
             "swaps": self.swaps,
+            "values_refreshes": self.values_refreshes,
+            "skipped_rungs": dict(self.skipped_rungs),
             "pattern_nnz": self.snapshot.nnz,
             "pattern_fingerprint": self.snapshot.fingerprint[:12],
             "drift_threshold": self.config.drift_threshold,

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Sequence, Tuple, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -150,11 +150,19 @@ class PatternSnapshot:
 
     Host-side NumPy only: snapshots ride inside saved plans/sessions and
     their ``fingerprint`` stamps stats/BENCH records.
+
+    ``values_digest`` additionally fingerprints the nonzero VALUES (it
+    never enters ``drift``): an unchanged ``fingerprint`` with a changed
+    ``values_digest`` is a values-only update — the plan still matches,
+    only the exec arrays need refreshing (``SpmmSession.maybe_replan``
+    reuses the compiled executables on exactly this signal). ``None`` on
+    snapshots saved before the field existed.
     """
 
     shape: Tuple[int, int]
     keys: np.ndarray  # int64 [nnz], sorted row * ncols + col
     fingerprint: str  # sha1 hex of shape + keys
+    values_digest: Optional[str] = None  # sha1 hex of nonzero values
 
     @property
     def nnz(self) -> int:
@@ -177,15 +185,15 @@ class PatternSnapshot:
 
 def pattern_snapshot(a: Union[CSRMatrix, COOMatrix]) -> PatternSnapshot:
     """Snapshot a matrix's sparsity pattern for later drift checks."""
-    if isinstance(a, COOMatrix):
-        keys = np.unique(a.row.astype(np.int64) * a.shape[1] + a.col)
-    else:
-        coo = a.to_coo()
-        keys = np.unique(coo.row.astype(np.int64) * a.shape[1] + coo.col)
+    coo = a if isinstance(a, COOMatrix) else a.to_coo()
+    keys = np.unique(coo.row.astype(np.int64) * a.shape[1] + coo.col)
     h = hashlib.sha1()
     h.update(np.asarray(a.shape, np.int64).tobytes())
     h.update(keys.tobytes())
-    return PatternSnapshot(tuple(a.shape), keys, h.hexdigest())
+    hv = hashlib.sha1()
+    hv.update(np.ascontiguousarray(coo.val, np.float32).tobytes())
+    return PatternSnapshot(tuple(a.shape), keys, h.hexdigest(),
+                           hv.hexdigest())
 
 
 @dataclasses.dataclass(frozen=True)

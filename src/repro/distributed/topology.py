@@ -250,6 +250,22 @@ class Topology:
             "platform": getattr(self.devices[0], "platform", "unknown"),
         }
 
+    def fingerprint(self) -> str:
+        """Stable identity of the execution substrate (autotune cache key).
+
+        Hashes what changes measured timings: device count, tier
+        structure, host layout, platform and device kind. Deliberately
+        NOT the device ids — the same fleet shape on different hosts
+        must share profiled results.
+        """
+        import hashlib
+        import json
+
+        d = self.describe()
+        d["device_kind"] = getattr(self.devices[0], "device_kind", "unknown")
+        blob = json.dumps(d, sort_keys=True, default=str)
+        return hashlib.sha1(blob.encode()).hexdigest()
+
     # ----- mesh construction -------------------------------------------
 
     def flat_mesh(self) -> Tuple[Mesh, str]:

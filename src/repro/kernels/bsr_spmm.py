@@ -27,7 +27,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..compat import tpu_compiler_params
 
-__all__ = ["bsr_spmm_pallas"]
+__all__ = ["bsr_spmm_pallas", "bsr_spmm_acc_pallas"]
 
 
 def _kernel(cols_ref, blocks_ref, b_ref, out_ref, *, t_steps: int):
@@ -87,4 +87,77 @@ def bsr_spmm_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(block_cols, blocks, b3)
+    return out.astype(b.dtype)
+
+
+def _acc_kernel(cols_ref, blocks_ref, b_ref, acc_ref, out_ref):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = acc_ref[...]
+
+    a_blk = blocks_ref[0, 0]  # [bm, bk]
+    b_blk = b_ref[0]  # [bk, bn]
+    out_ref[...] += jax.lax.dot_general(
+        a_blk, b_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"),
+                   donate_argnames=("acc",))
+def bsr_spmm_acc_pallas(
+    block_cols: jax.Array,  # [mb, t] int32, -1 padded
+    blocks: jax.Array,  # [mb, t, bm, bk]
+    b: jax.Array,  # [kb*bk, n]
+    acc: jax.Array,  # [mb*bm, n] f32 — consumed (donated + aliased)
+    *,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns ``acc + A @ B`` with the accumulator as an aliased operand.
+
+    The segment-accumulating form of ``bsr_spmm_pallas``: the running
+    accumulator rides INTO the kernel as an input/output-aliased operand
+    (its buffer is reused for the result — no fresh C allocation per
+    round), and the per-slot accumulation chain is
+    ``((acc + d_0) + d_1) + ...`` in ascending t order — bit-identical to
+    looping ``acc = acc + bsr_spmm_pallas(slot_t)`` over the slots, which
+    is what the overlapped executors' cumulative-prefix contract requires.
+    ``acc`` is donated: callers must not reuse it after the call.
+    """
+    mb, t_steps, bm, bk = blocks.shape
+    n = b.shape[1]
+    if n % bn:
+        raise ValueError(f"n={n} must be a multiple of bn={bn}")
+    if acc.shape != (mb * bm, n):
+        raise ValueError(f"acc shape {acc.shape} != {(mb * bm, n)}")
+    n_tiles = n // bn
+    b3 = b.reshape(-1, bk, n)  # block-row view [kb, bk, n]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mb, n_tiles, t_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk), lambda i, j, t, cols: (i, t, 0, 0)),
+            pl.BlockSpec(
+                (1, bk, bn),
+                lambda i, j, t, cols: (jnp.maximum(cols[i, t], 0), 0, j),
+            ),
+            pl.BlockSpec((bm, bn), lambda i, j, t, cols: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t, cols: (i, j)),
+    )
+    out = pl.pallas_call(
+        _acc_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb * bm, n), jnp.float32),
+        # operand index counts the scalar-prefetch arg: acc is input 3
+        input_output_aliases={3: 0},
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(block_cols, blocks, b3, acc.astype(jnp.float32))
     return out.astype(b.dtype)

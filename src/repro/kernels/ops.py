@@ -23,13 +23,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref as _ref
-from .bsr_spmm import bsr_spmm_pallas
+from .bsr_spmm import bsr_spmm_acc_pallas, bsr_spmm_pallas
 from .gather_rows import gather_rows_pallas
 from .scatter_add_rows import prepare_sorted_scatter, scatter_add_rows_sorted_pallas
 
 __all__ = [
     "kernel_backend",
     "bsr_spmm_op",
+    "bsr_spmm_acc_op",
     "gather_rows_op",
     "scatter_add_rows_op",
     "pack_rows_op",
@@ -57,6 +58,28 @@ def bsr_spmm_op(block_cols: jax.Array, blocks: jax.Array, b: jax.Array,
         return bsr_spmm_pallas(block_cols, blocks, b,
                                bn=min(bn, b.shape[1]), interpret=True)
     return _ref.bsr_spmm_ref(block_cols, blocks, b)
+
+
+def bsr_spmm_acc_op(block_cols: jax.Array, blocks: jax.Array, b: jax.Array,
+                    acc: jax.Array, *, bn: int = 128) -> jax.Array:
+    """``acc + A @ B`` with the accumulator as an aliased kernel operand.
+
+    Pallas/interpret route through ``bsr_spmm_acc_pallas`` (the running
+    accumulator's buffer is donated and input/output-aliased — no fresh C
+    allocation per consumed round); the ref path replays the same
+    ascending-slot addition chain ``((acc + d_0) + d_1) + ...`` one slot
+    at a time, so all three backends stay bit-compatible with the staged
+    executors' accumulation order.
+    """
+    be = kernel_backend()
+    if be in ("pallas", "interpret"):
+        return bsr_spmm_acc_pallas(block_cols, blocks, b, acc,
+                                   bn=min(bn, b.shape[1]),
+                                   interpret=(be == "interpret"))
+    for t in range(block_cols.shape[1]):
+        acc = acc + _ref.bsr_spmm_ref(block_cols[:, t:t + 1],
+                                      blocks[:, t:t + 1], b)
+    return acc
 
 
 @functools.partial(jax.custom_jvp, nondiff_argnums=(2,))

@@ -19,7 +19,7 @@ import re
 from typing import Dict, Optional
 
 __all__ = ["DTYPE_BYTES", "parse_shape_bytes", "collective_bytes",
-           "collective_rows", "roofline", "HW"]
+           "collective_rows", "roofline", "executable_memory", "HW"]
 
 HW = {
     "peak_flops": 197e12,  # bf16 FLOP/s per chip
@@ -111,6 +111,44 @@ def collective_rows(coll: Dict[str, int], n_dense: int,
     schedule's executed bytes match the planner's accounting.
     """
     return coll.get("total", 0) / float(n_dense * sz_dt)
+
+
+_MEMORY_FIELDS = (
+    "argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes",
+    "generated_code_size_in_bytes", "alias_size_in_bytes",
+)
+
+
+def executable_memory(compiled) -> Dict[str, int]:
+    """Per-device allocation profile of an AOT-compiled computation.
+
+    Reads ``compiled.memory_analysis()`` (XLA ``CompiledMemoryStats``)
+    and adds ``total_allocation_size`` = arguments + outputs + temps +
+    generated code − aliased bytes, i.e. what the executable actually
+    pins per device — donated/aliased operands are counted once. Returns
+    ``{}`` when the backend exposes no memory stats (older plugins),
+    so callers can treat the numbers as best-effort.
+    """
+    try:
+        stats = compiled.memory_analysis()
+    except Exception:  # pragma: no cover — backend without the API
+        return {}
+    if stats is None:  # pragma: no cover
+        return {}
+    out: Dict[str, int] = {}
+    for field in _MEMORY_FIELDS:
+        v = getattr(stats, field, None)
+        if v is not None:
+            out[field] = int(v)
+    if not out:  # pragma: no cover — unexpected stats object
+        return {}
+    out["total_allocation_size"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        + out.get("generated_code_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0))
+    return out
 
 
 def roofline(cost: dict, coll: Dict[str, int], *, chips: int,

@@ -44,6 +44,40 @@ def test_compare_ignores_error_records_in_gate():
     assert runner.compare_records(cur, base, 0.05) == []
 
 
+def test_compare_empty_baseline_fails_instead_of_passing():
+    """A baseline with nothing to check is a gate failure, not a pass."""
+    cur = [_rec("BENCH_a", padded_rows=1)]
+    for base in ([], [{"bench": "BENCH_x", "error": "boom"}]):
+        violations = runner.compare_records(cur, base, 0.05)
+        assert violations and "no usable records" in violations[0]
+
+
+def test_compare_every_missing_record_is_named():
+    base = [_rec("BENCH_a", padded_rows=1), _rec("BENCH_b", padded_rows=1),
+            _rec("BENCH_c", padded_rows=1)]
+    violations = runner.compare_records([_rec("BENCH_b", padded_rows=1)],
+                                        base, 0.05)
+    assert any("BENCH_a: missing" in v for v in violations)
+    assert any("BENCH_c: missing" in v for v in violations)
+    assert not any("BENCH_b" in v for v in violations)
+
+
+def test_compare_gates_allocation_only_under_matching_jax():
+    jaxv = runner._jax_version()
+    # same jax stamp: a >5% allocation growth trips the gate
+    base = [_rec("BENCH_a", total_allocation_size=1000, jax=jaxv)]
+    cur = [_rec("BENCH_a", total_allocation_size=1200, jax=jaxv)]
+    violations = runner.compare_records(cur, base, 0.05)
+    assert any("BENCH_a.total_allocation_size" in v for v in violations)
+    # a baseline recorded under another jax version is not comparable
+    base_other = [_rec("BENCH_a", total_allocation_size=1000,
+                       jax="0.0.0-other")]
+    assert runner.compare_records(cur, base_other, 0.05) == []
+    # within tolerance under matching jax: clean pass
+    ok = [_rec("BENCH_a", total_allocation_size=1010, jax=jaxv)]
+    assert runner.compare_records(ok, base, 0.05) == []
+
+
 def _fake_module(rows, explode_after=None):
     mod = types.ModuleType("benchmarks.fake")
 
