@@ -38,16 +38,25 @@ Flags:
                   named), or when the baseline itself carries no usable
                   records.
   --tolerance F   relative slack for --compare (default 0.05).
+  --family-timeout SECONDS
+                  wall-clock bound per benchmark family (default: the
+                  REPRO_BENCH_FAMILY_TIMEOUT env var, else unbounded). A
+                  family still running when the bound expires is
+                  abandoned: its partial rows ship plus one record with
+                  an "error" field naming the timeout, and the harness
+                  exits 2 — a hung family can no longer hang CI.
 
 Exit codes (so CI can tell "regressed" from "crashed"):
   0  all benchmarks ran; no gate violation
   1  gate violation (--compare found regressions / missing records)
-  2  a benchmark family raised mid-sweep — its partial rows are still
-     emitted, plus one record carrying an "error" field
+  2  a benchmark family raised mid-sweep or exceeded --family-timeout —
+     its partial rows are still emitted, plus one record carrying an
+     "error" field
 """
 import argparse
 import json
 import sys
+import threading
 import traceback
 
 EXIT_REGRESSED = 1
@@ -139,6 +148,22 @@ def compare_records(current: list, baseline: list,
     return violations
 
 
+def _run_family(mod, rows: list) -> None:
+    """Stream one family's CSV rows (printed as produced) into ``rows``."""
+    for row in mod.run():
+        print(row, flush=True)
+        rows.append(row)
+    if hasattr(mod, "run_group_aware"):
+        for row in mod.run_group_aware():
+            print(row, flush=True)
+            rows.append(row)
+
+
+def _env_family_timeout():
+    raw = os.environ.get("REPRO_BENCH_FAMILY_TIMEOUT")
+    return float(raw) if raw else None
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="SHIRO benchmark harness (one module per figure)")
@@ -152,6 +177,12 @@ def main(argv=None) -> None:
                          "regress beyond --tolerance vs this baseline JSON")
     ap.add_argument("--tolerance", type=float, default=0.05,
                     help="relative slack for --compare (default 0.05)")
+    ap.add_argument("--family-timeout", type=float,
+                    default=_env_family_timeout(), metavar="SECONDS",
+                    help="wall-clock bound per benchmark family; a family "
+                         "still running after this is abandoned with an "
+                         "error record and exit 2 (default: the "
+                         "REPRO_BENCH_FAMILY_TIMEOUT env var, else none)")
     args = ap.parse_args(argv)
 
     from . import (fig5_patterns, fig7_scaling, fig8_volume, fig9_balance,
@@ -175,23 +206,46 @@ def main(argv=None) -> None:
     for mod in modules:
         short_name = mod.__name__.rsplit(".", 1)[-1]
         rows = []
+        hung = False
         try:
-            for row in mod.run():
-                print(row, flush=True)
-                rows.append(row)
-            if hasattr(mod, "run_group_aware"):
-                for row in mod.run_group_aware():
-                    print(row, flush=True)
-                    rows.append(row)
+            if args.family_timeout is None:
+                _run_family(mod, rows)
+            else:
+                # the family runs on a daemon thread so a hang inside a
+                # benchmark (a wedged collective, an XLA deadlock) can be
+                # abandoned at the deadline instead of hanging the run
+                failure = []
+
+                def _target(mod=mod, rows=rows, failure=failure):
+                    try:
+                        _run_family(mod, rows)
+                    except BaseException as e:  # re-raised on main thread
+                        failure.append(e)
+
+                t = threading.Thread(target=_target, daemon=True,
+                                     name=f"bench-{short_name}")
+                t.start()
+                t.join(args.family_timeout)
+                if t.is_alive():
+                    hung = True
+                    raise TimeoutError(
+                        f"family exceeded {args.family_timeout:g}s (hung)")
+                if failure:
+                    raise failure[0]
         except Exception as e:
             crashed += 1
             print(f"{mod.__name__},nan,ERROR", flush=True)
-            traceback.print_exc(file=sys.stderr)
+            if hung:
+                print(f"{mod.__name__}: {e}", file=sys.stderr)
+            else:
+                traceback.print_exc(file=sys.stderr)
             # partial records still ship, plus a marker the gate can
             # tell apart from a regression (exit 2 vs 1)
             records.append({"bench": f"BENCH_{short_name}",
                             "error": f"{type(e).__name__}: {e}"})
-        records += _records(rows)  # keep whatever the module got out
+        # keep whatever the module got out (snapshot: an abandoned
+        # family's thread may still be appending)
+        records += _records(list(rows))
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"records": records}, f, indent=1, sort_keys=True)

@@ -12,10 +12,10 @@ paper-branded alias lives in the sibling ``shiro`` package
 (``shiro.compile``). Everything else stays addressed by subpackage
 (``repro.core``, ``repro.models``, ...).
 """
-__version__ = "0.6.0"  # stamped into autotune cache keys (core.autotune)
+__version__ = "0.7.0"  # stamped into autotune cache keys (core.autotune)
 
 __all__ = ["SpmmConfig", "DistSpmm", "compile_spmm", "SpmmSession",
-           "Topology"]
+           "Topology", "FaultPlan", "NumericalFault"]
 
 _HOMES = {
     "SpmmConfig": "core.api",
@@ -23,6 +23,8 @@ _HOMES = {
     "compile_spmm": "core.api",
     "SpmmSession": "core.session",
     "Topology": "distributed.topology",
+    "FaultPlan": "robustness",
+    "NumericalFault": "robustness",
 }
 
 

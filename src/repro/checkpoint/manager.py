@@ -20,6 +20,7 @@ the contract, and it is covered by tests including a topology change).
 from __future__ import annotations
 
 import contextlib
+import hashlib
 import json
 import os
 import shutil
@@ -29,7 +30,8 @@ from typing import Any, Dict, Iterator, List, Optional
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager", "atomic_dir"]
+__all__ = ["CheckpointManager", "atomic_dir", "file_digest",
+           "bundle_manifest", "verify_bundle"]
 
 
 @contextlib.contextmanager
@@ -49,9 +51,78 @@ def atomic_dir(final: str) -> Iterator[str]:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     yield tmp
+    from ..robustness import faults
+
+    # chaos hook: a scheduled torn_checkpoint fault truncates one staged
+    # file right before publication — the one window the rename trick
+    # cannot defend (a torn COPY into the stage, not a torn publish).
+    # Per-file digest manifests (bundle_manifest/verify_bundle) exist to
+    # catch exactly this at load time.
+    faults.maybe_tear_dir("atomic_dir", tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+
+
+def file_digest(path: str, chunk: int = 1 << 20) -> str:
+    """Streaming sha256 of one file (bundles can exceed memory)."""
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                break
+            h.update(block)
+    return h.hexdigest()
+
+
+def bundle_manifest(directory: str,
+                    exclude: tuple = ()) -> Dict[str, Dict[str, Any]]:
+    """Per-file ``{name: {"bytes", "sha256"}}`` manifest of a staged
+    bundle — written into the bundle's own metadata so a torn or
+    truncated file is detected at LOAD time with its name, instead of
+    surfacing as an unpickling/npz error naming nothing."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for name in sorted(os.listdir(directory)):
+        full = os.path.join(directory, name)
+        if name in exclude or not os.path.isfile(full):
+            continue
+        out[name] = {"bytes": os.path.getsize(full),
+                     "sha256": file_digest(full)}
+    return out
+
+
+def verify_bundle(directory: str, manifest: Optional[Dict[str, Any]],
+                  source: str) -> None:
+    """Check every manifest entry before any file is parsed.
+
+    Raises ``ValueError`` naming the damaged file and the mismatch kind
+    (missing / size / digest) — the actionable form of "this bundle is
+    torn; re-copy or re-save it". A ``None`` manifest (bundle predates
+    digests) verifies nothing, keeping old bundles loadable.
+    """
+    if not manifest:
+        return
+    for name, want in manifest.items():
+        full = os.path.join(directory, name)
+        if not os.path.exists(full):
+            raise ValueError(
+                f"{source}: bundle file {name!r} is missing — the bundle "
+                f"is incomplete (torn copy or partial delete); re-fetch "
+                f"or re-save it.")
+        size = os.path.getsize(full)
+        if int(want.get("bytes", size)) != size:
+            raise ValueError(
+                f"{source}: bundle file {name!r} is truncated "
+                f"({size} bytes, manifest says {want['bytes']}); the "
+                f"copy was torn mid-write — re-fetch or re-save the "
+                f"bundle.")
+        digest = want.get("sha256")
+        if digest and file_digest(full) != digest:
+            raise ValueError(
+                f"{source}: bundle file {name!r} fails its sha256 check "
+                f"(content corrupted in transit or on disk); re-fetch "
+                f"or re-save the bundle.")
 
 
 def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
@@ -107,6 +178,10 @@ class CheckpointManager:
                 "time": time.time(),
                 "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                          for k, v in flat.items()},
+                # per-file digests: restore() verifies these BEFORE
+                # np.load touches anything, so a torn copy of the
+                # checkpoint fails naming the file, not mid-parse
+                "files": bundle_manifest(tmp),
                 "extra": extra or {},
             }
             with open(os.path.join(tmp, "metadata.json"), "w") as f:
@@ -134,6 +209,7 @@ class CheckpointManager:
         d = self._step_dir(step)
         with open(os.path.join(d, "metadata.json")) as f:
             meta = json.load(f)
+        verify_bundle(d, meta.get("files"), source=f"checkpoint {d}")
         data = np.load(os.path.join(d, "arrays.npz"))
         flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
         flat_sh = (jax.tree_util.tree_leaves(shardings)

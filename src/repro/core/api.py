@@ -58,6 +58,7 @@ all accepted and normalized by ``Topology.resolve``).
 from __future__ import annotations
 
 import dataclasses
+import os
 import pickle
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
@@ -68,6 +69,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from ..distributed.topology import Topology
 from ..launch.hlo_analysis import executable_memory
+from ..robustness import faults, guards
 from .comm_model import (
     NetworkSpec, choose_hier_schedule, choose_schedule,
     modeled_time, modeled_time_hier, modeled_time_hier_overlap,
@@ -181,6 +183,16 @@ class SpmmConfig:
     ``profile_topk``   how many model-ranked candidates to time-profile.
     ``profile_iters``  timed runs per candidate (median is kept).
     ``profile_warmup`` discarded warmup runs per candidate.
+    ``check``          serving-path guardrails (``robustness.guards``):
+                       ``"auto"`` (default) validates B's shape/dtype
+                       with actionable errors before XLA sees the
+                       mismatch, validates the sparse operand's values
+                       are finite at plan/replan time, and runs a cheap
+                       SAMPLED ``isfinite`` sweep over each served C —
+                       raising ``NumericalFault`` naming the first bad
+                       element/call. ``"full"``/``True`` sweeps every C
+                       element; ``False`` disables all of it
+                       (bit-identical to the unguarded path).
     """
 
     strategy: Strategy = "joint"
@@ -200,8 +212,13 @@ class SpmmConfig:
     profile_topk: int = 3
     profile_iters: int = 3
     profile_warmup: int = 1
+    check: Union[str, bool] = "auto"
 
     def __post_init__(self) -> None:
+        if self.check not in ("auto", "full", True, False):
+            raise ValueError(
+                f"check must be 'auto', 'full', True or False; "
+                f"got {self.check!r}")
         if isinstance(self.schedule, bool) or not (
                 self.schedule in _SCHEDULE_POLICIES
                 or (isinstance(self.schedule, int) and self.schedule >= 1)):
@@ -309,6 +326,10 @@ class DistSpmm:
         self.lowerings: List[Tuple[int, str, str]] = []
         self.cache_hits = 0
         self.values_refreshes = 0
+        # guardrails (older pickled configs predate the field -> "auto")
+        self._check = guards.check_mode(config)
+        self.calls = 0             # concrete __call__ executions served
+        self.numerical_faults = 0  # C sweeps that raised NumericalFault
         # B is row-sharded over every mesh axis; pinning it at lowering
         # time lets the AOT executables accept any caller layout (we
         # reshard on call instead of failing the dispatch-time check)
@@ -389,8 +410,19 @@ class DistSpmm:
         return compiled
 
     def __call__(self, b, backend: Optional[BackendSpec] = None) -> jax.Array:
-        """``C = A @ b`` — cached executable, or traced inline under jit."""
+        """``C = A @ b`` — cached executable, or traced inline under jit.
+
+        Under ``config.check`` the call is guarded at both ends: B's
+        shape/dtype is validated with an actionable error BEFORE any
+        device placement or lowering (tracers included — the checks are
+        static), and the computed C gets a sampled ``isfinite`` sweep
+        that raises ``NumericalFault`` naming the first bad element.
+        """
         name = self._backend_name(backend)
+        if self._check:
+            guards.validate_dense_operand(
+                b, k_expected=self.plan.shape[1],
+                context=f"DistSpmm(P={self.plan.P}) call")
         if _is_tracer(b):
             return self._raw_call(b, name)
         b_in = b
@@ -403,7 +435,21 @@ class DistSpmm:
             # the caller handed us an already-placed device array; donating
             # it would consume THEIR buffer — donate a private copy instead
             b = b.copy()
-        return fn(self._device_ex(), b)
+        c = fn(self._device_ex(), b)
+        self.calls += 1
+        # chaos hook: nan_poison at site "output" models a broken
+        # backend kernel — fires with or without check, exactly like the
+        # real failure it stands in for
+        c = faults.maybe_poison_array(c, site="output")
+        if self._check:
+            try:
+                guards.sampled_finite_check(
+                    c, mode=self._check, call_index=self.calls,
+                    context=f"DistSpmm(P={self.plan.P}) backend={name!r}")
+            except guards.NumericalFault:
+                self.numerical_faults += 1
+                raise
+        return c
 
     def warm_from(self, other: "DistSpmm") -> int:
         """Pre-lower every executable ``other`` has served.
@@ -511,6 +557,9 @@ class DistSpmm:
             drift_threshold=self.config.drift_threshold,
             donated_buffers=("b",) if self._donate else (),
             values_refreshes=self.values_refreshes,
+            check=self._check,
+            calls=self.calls,
+            numerical_faults=self.numerical_faults,
         )
         out.setdefault("decision_source", "model")
         out.setdefault("measured_time", None)
@@ -590,8 +639,20 @@ class DistSpmm:
         plans from your own fleet's artifact channel, never from
         untrusted sources.
         """
-        with open(path, "rb") as f:
-            payload = pickle.load(f)
+        if os.path.getsize(path) == 0:
+            raise ValueError(
+                f"{path!r} is empty (0 bytes) — the save was torn "
+                f"mid-write or the copy never completed; re-fetch the "
+                f"plan or re-run compile_spmm(...).save().")
+        try:
+            with open(path, "rb") as f:
+                payload = pickle.load(f)
+        except (EOFError, pickle.UnpicklingError) as e:
+            raise ValueError(
+                f"{path!r} is not a complete saved DistSpmm plan "
+                f"({type(e).__name__}: {e}) — the file was truncated or "
+                f"corrupted in transit; re-fetch it or re-run "
+                f"compile_spmm(...).save().") from None
         if payload.get("format") != _SAVE_FORMAT:
             raise ValueError(f"{path!r} is not a saved DistSpmm handle")
         return materialize_payload(payload, where, source=path)

@@ -41,6 +41,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import tempfile
 import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -136,6 +137,11 @@ class AutotuneCache:
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         fname = self._file(key)
         try:
+            if os.path.getsize(fname) == 0:
+                # a zero-byte entry is what a torn write looks like on
+                # filesystems that journal metadata before data — name
+                # it instead of surfacing a bare JSONDecodeError
+                raise ValueError("zero-byte entry (torn write)")
             with open(fname) as f:
                 rec = json.load(f)
             if not isinstance(rec, dict) \
@@ -161,13 +167,33 @@ class AutotuneCache:
         fname = self._file(key)
         try:
             os.makedirs(self.path, exist_ok=True)
-            tmp = fname + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(rec, f, indent=1, sort_keys=True)
-            os.replace(tmp, fname)  # atomic: readers never see half a file
+            # a PRIVATE temp name per writer: concurrent compile_spmm
+            # processes racing on one key must never share a staging
+            # file (a fixed "<key>.tmp" lets writer B rename writer A's
+            # half-written bytes into place); mkstemp + replace keeps
+            # last-writer-wins with every published entry complete
+            fd, tmp = tempfile.mkstemp(
+                dir=self.path, prefix=f"{key}.", suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(rec, f, indent=1, sort_keys=True)
+                os.replace(tmp, fname)  # atomic: readers see all or nothing
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
         except OSError as e:  # read-only cache dir etc — non-fatal
             warnings.warn(f"autotune cache write to {fname} failed ({e})",
                           stacklevel=2)
+            return
+        from ..robustness import faults
+
+        # chaos hook: a scheduled autotune_corrupt fault damages the
+        # entry we just published, exactly like a torn concurrent write
+        faults.maybe_corrupt_file("autotune_corrupt", "autotune_cache",
+                                  fname)
 
 
 def get_cache() -> Optional[AutotuneCache]:

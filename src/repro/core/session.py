@@ -41,6 +41,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
 from jax.sharding import Mesh
 
 from ..distributed.topology import Topology, TopologyError
+from ..robustness import faults, guards
 from .api import (
     DistSpmm, SpmmConfig, _materialize, _plan_and_tune,
     check_payload_version, materialize_payload,
@@ -116,6 +117,7 @@ class SpmmSession:
         config = config or SpmmConfig()
         if overrides:
             config = dataclasses.replace(config, **overrides)
+        a = _guard_operand(a, config, "SpmmSession.build")
         topo = Topology.resolve(where)
         ladder = tuple(sorted(set(int(p) for p in (p_ladder or (topo.P,)))))
         if any(p < 1 for p in ladder):
@@ -222,6 +224,8 @@ class SpmmSession:
         path is ``replan``'s: the swapped-in handle is warm before the
         old one stops being returned.
         """
+        a_new = _guard_operand(a_new, self.config,
+                               "SpmmSession.maybe_replan")
         snap_new = pattern_snapshot(a_new)  # once; drift + replan reuse it
         d = self.drift(snap_new)
         if d <= self.config.drift_threshold:
@@ -255,6 +259,9 @@ class SpmmSession:
         ``rungs``: "current" (default — other rungs replan lazily when a
         resize selects them), "all", or explicit P values.
         """
+        if _snapshot is None:  # direct call; maybe_replan already guarded
+            a_new = _guard_operand(a_new, self.config,
+                                   "SpmmSession.replan")
         snap_new = _snapshot or pattern_snapshot(a_new)
         drift = self.snapshot.drift(snap_new)
         self.snapshot = snap_new
@@ -294,6 +301,12 @@ class SpmmSession:
         dropping a handle (lazy re-materialization, which re-lowers)
         only if a rung's refreshed geometry surprisingly mismatches.
         """
+        if guards.check_mode(self.config):
+            # values-refresh is the one path that swaps arrays under
+            # compiled code — digest-check the pattern really is the
+            # planned one before anything is touched
+            guards.validate_pattern(snap_new, self.snapshot,
+                                    context="SpmmSession.values_refresh")
         self.snapshot = snap_new
         self._operand = a_new
         for P, rung in sorted(self._rungs.items()):
@@ -406,8 +419,12 @@ class SpmmSession:
           rung_P{P}.shiro     per-rung DistSpmm payload (pickle)
           operand.pkl         the live sparse operand (optional; needed
                               for post-load replans)
+
+        session.json carries a per-file size+sha256 manifest of the
+        other bundle files; ``load`` verifies it before unpickling, so a
+        bundle torn in transit fails naming the damaged file.
         """
-        from ..checkpoint.manager import atomic_dir
+        from ..checkpoint.manager import atomic_dir, bundle_manifest
 
         with atomic_dir(path) as tmp:
             for P, rung in sorted(self._rungs.items()):
@@ -417,6 +434,7 @@ class SpmmSession:
                 with open(os.path.join(tmp, "operand.pkl"), "wb") as f:
                     pickle.dump(self._operand, f)
             meta = {
+                "files": bundle_manifest(tmp),
                 "format": _SESSION_FORMAT,
                 "version": _SESSION_VERSION,
                 "ladder": list(self.ladder),
@@ -460,11 +478,23 @@ class SpmmSession:
                 f"{_KNOWN_SESSION_VERSIONS}. Re-save the session with "
                 f"the version that will load it — bundles regenerate "
                 f"cheaply from the operand matrix.")
+        from ..checkpoint.manager import verify_bundle
+
+        # digest-verify every bundle file BEFORE unpickling anything: a
+        # torn/truncated copy fails here naming the file (old bundles
+        # without a manifest skip verification and load as before)
+        verify_bundle(path, meta.get("files"),
+                      source=f"SpmmSession bundle {path!r}")
         rungs: Dict[int, LadderRung] = {}
         snapshot: Optional[PatternSnapshot] = None
         config: Optional[SpmmConfig] = None
         for P in meta["ladder"]:
             fname = os.path.join(path, _rung_file(P))
+            if not os.path.exists(fname):
+                raise ValueError(
+                    f"SpmmSession bundle {path!r} is missing "
+                    f"{_rung_file(P)} for ladder rung P={P} — the bundle "
+                    f"is incomplete (torn copy); re-fetch or re-save it.")
             with open(fname, "rb") as f:
                 payload = pickle.load(f)
             check_payload_version(payload, fname)
@@ -494,6 +524,17 @@ class SpmmSession:
                 f"re-build with a smaller rung")
         session.current_P = rung
         return session
+
+
+def _guard_operand(a: CSRMatrix, config: SpmmConfig,
+                   context: str) -> CSRMatrix:
+    """The plan-time operand gate: apply any scheduled ``nan_poison``
+    fault (site ``operand``), then — under ``config.check`` — validate
+    the nonzero values are finite before MWVC sees them."""
+    a = faults.maybe_poison_values(a, site="operand")
+    if guards.check_mode(config):
+        guards.validate_sparse_values(a, context=context)
+    return a
 
 
 def _rung_file(P: int) -> str:

@@ -43,14 +43,143 @@ Two entry modes:
   smoke across the fleet — compile through ``SpmmSession``, serve two
   call shapes, verify every addressable shard against the dense
   reference, exercise a replan hot-swap.
+
+Supervised mode (``--supervise``) wraps the launcher in a recovery
+loop: workers write heartbeat files (progress-stamped, atomic) into a
+shared rundir; the ``Supervisor`` detects a dead worker (nonzero exit)
+or a stalled one (no progress within ``REPRO_MP_HEARTBEAT_TIMEOUT``)
+within one poll interval, kills the remaining fleet (a dead rank leaves
+siblings blocked in collectives — jax.distributed cannot rejoin a
+single process mid-run, so the honest recoverable unit is the fleet),
+and relaunches it with bounded exponential backoff. Each relaunch bumps
+``REPRO_FAULTS_EPOCH`` so injected faults scheduled for epoch 0 don't
+re-fire — a restarted fleet runs clean. When ``REPRO_MP_MAX_RESTARTS``
+is exhausted the supervisor DEGRADES instead of giving up: it relaunches
+with one fewer process, and the workers — whose ``SpmmSession`` is
+built over the full P-ladder (``REPRO_MP_LADDER``) — drive
+``session.on_resize`` down to the largest rung the surviving devices
+fit. Every wait is deadline-bounded; the supervisor never hangs.
 """
 import argparse
+import dataclasses
+import json
+import shutil
 import socket
 import subprocess
+import tempfile
+import threading
 import time
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
-__all__ = ["initialize", "worker_smoke", "main"]
+from ..robustness import faults
+
+__all__ = ["initialize", "worker_smoke", "main",
+           "Heartbeat", "Supervisor", "SupervisorPolicy",
+           "write_heartbeat", "read_heartbeat", "heartbeat_path"]
+
+RUNDIR_ENV = "REPRO_MP_RUNDIR"
+LADDER_ENV = "REPRO_MP_LADDER"
+DEGRADED_ENV = "REPRO_MP_DEGRADED"
+HEARTBEAT_ENV = "REPRO_MP_HEARTBEAT"
+HEARTBEAT_TIMEOUT_ENV = "REPRO_MP_HEARTBEAT_TIMEOUT"
+MAX_RESTARTS_ENV = "REPRO_MP_MAX_RESTARTS"
+BACKOFF_ENV = "REPRO_MP_BACKOFF"
+
+
+# ---------------------------------------------------------------------------
+# heartbeats
+# ---------------------------------------------------------------------------
+
+
+def heartbeat_path(rundir: str, rank: int) -> str:
+    return os.path.join(rundir, f"hb_{int(rank)}.json")
+
+
+def write_heartbeat(rundir: str, rank: int, *, stage: str, progress: int,
+                    progress_time: Optional[float] = None) -> None:
+    """One atomic heartbeat-file update (tmp + replace, like every other
+    publish in the repo — the supervisor never reads half a record)."""
+    now = time.time()
+    rec = {"rank": int(rank), "pid": os.getpid(), "stage": stage,
+           "progress": int(progress),
+           "progress_time": float(progress_time
+                                  if progress_time is not None else now),
+           "time": now}
+    path = heartbeat_path(rundir, rank)
+    tmp = f"{path}.{os.getpid()}.tmp"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(rec, f)
+        os.replace(tmp, path)
+    except OSError:  # rundir torn down mid-shutdown: never fatal
+        pass
+
+
+def read_heartbeat(rundir: str, rank: int) -> Optional[dict]:
+    try:
+        with open(heartbeat_path(rundir, rank)) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+class Heartbeat:
+    """A worker's liveness signal: a background writer thread plus
+    MAIN-THREAD progress stamps.
+
+    The split matters: the writer thread updates the file even while the
+    main thread is stuck in a collective, so mere file freshness can't
+    detect a stall. ``progress_time`` is only advanced by ``tick()`` /
+    ``stage()`` calls from the worker's main thread — the supervisor
+    keys stall detection on THAT, catching both a wedged process (file
+    goes stale too) and a wedged main thread (file fresh, progress old).
+    """
+
+    def __init__(self, rundir: str, rank: int, interval: float = 0.5):
+        self.rundir = rundir
+        self.rank = int(rank)
+        self.interval = float(interval)
+        self.progress = 0
+        self.progress_time = time.time()
+        self._stage = "start"
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=f"heartbeat-{rank}")
+
+    @classmethod
+    def maybe_start(cls, rank: int) -> Optional["Heartbeat"]:
+        """Start a heartbeat iff the supervisor provided a rundir —
+        unsupervised launches carry zero new machinery."""
+        rundir = os.environ.get(RUNDIR_ENV)
+        if not rundir:
+            return None
+        hb = cls(rundir, rank,
+                 interval=float(os.environ.get(HEARTBEAT_ENV, "0.5")))
+        hb._write()
+        hb._thread.start()
+        return hb
+
+    def stage(self, name: str) -> None:
+        self._stage = name
+        self.tick()
+
+    def tick(self) -> None:
+        self.progress += 1
+        self.progress_time = time.time()
+        self._write()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._write()
+
+    def _write(self) -> None:
+        write_heartbeat(self.rundir, self.rank, stage=self._stage,
+                        progress=self.progress,
+                        progress_time=self.progress_time)
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval):
+            self._write()
 
 
 def initialize(coordinator: Optional[str] = None,
@@ -85,11 +214,39 @@ def initialize(coordinator: Optional[str] = None,
 
 
 def worker_smoke() -> None:
-    """The quickstart flow, multi-controller: one session, real fleet."""
+    """The quickstart flow, multi-controller: one session, real fleet.
+
+    Under a supervisor (``REPRO_MP_RUNDIR`` set) the worker additionally
+    heartbeats through named stages — each stage boundary is a fault
+    fire site (``stage:init`` / ``stage:plan`` / ``stage:serve`` /
+    ``stage:replan``) for injected worker kills and delays — and builds
+    its session over the supervisor's full P-ladder
+    (``REPRO_MP_LADDER``), driving ``on_resize`` to the largest rung the
+    live fleet fits; a degraded relaunch therefore serves the surviving
+    rung of the SAME ladder. A single-process relaunch (``nproc=1``,
+    the last degradation step) skips ``jax.distributed`` entirely and
+    runs the identical flow single-controller.
+    """
     import numpy as np
 
-    topo = initialize()
-    import jax
+    env_rank = int(os.environ.get("REPRO_MP_RANK", "0") or 0)
+    hb = Heartbeat.maybe_start(env_rank)
+
+    def stage(name: str) -> None:
+        if hb is not None:
+            hb.stage(name)
+        faults.maybe_kill(f"stage:{name}", rank=env_rank)
+        faults.maybe_delay(f"stage:{name}", rank=env_rank)
+
+    stage("init")
+    nproc = int(os.environ.get("REPRO_MP_NPROC", "0") or 0)
+    if nproc == 1:
+        # degraded single-controller relaunch: no fleet to coordinate
+        from ..distributed.topology import Topology
+
+        topo = Topology.local()
+    else:
+        topo = initialize()
 
     rank = topo.process_index
     print(f"[rank {rank}] fleet: {topo.n_hosts} hosts x "
@@ -100,29 +257,51 @@ def worker_smoke() -> None:
     from ..core.session import SpmmSession
     from ..core.sparse import power_law_sparse
 
+    stage("plan")
+    ladder_env = os.environ.get(LADDER_ENV, "")
+    p_ladder = tuple(int(p) for p in ladder_env.split(",") if p) or None
     a = power_law_sparse(128, 128, 1024, 1.3, seed=0)
-    session = SpmmSession.build(a, topo, SpmmConfig(schedule="auto"))
-    handle = session.handle()
+    session = SpmmSession.build(a, topo, SpmmConfig(schedule="auto"),
+                                p_ladder=p_ladder)
+    if p_ladder is not None:
+        # the elastic path: the ladder may span fleets bigger than this
+        # one — serve the largest rung the live device census fits
+        handle = session.on_resize(topo.P)
+        degraded = os.environ.get(DEGRADED_ENV, "")
+        if degraded:
+            print(f"[rank {rank}] degraded fleet ({degraded}): "
+                  f"on_resize -> surviving rung P={session.current_P} "
+                  f"of ladder {session.ladder}", flush=True)
+    else:
+        handle = session.handle()
     st = handle.stats()
     print(f"[rank {rank}] {handle} schedule={st['schedule_kind']}"
           f"/K={st['schedule_K']} net={st['net']}", flush=True)
 
+    stage("serve")
     rng = np.random.default_rng(1)
     for n_cols in (8, 16):
+        faults.maybe_delay("collective", rank=env_rank)
         b = rng.standard_normal((128, n_cols)).astype(np.float32)
         c = handle(b)
         ref = a.to_dense() @ b
         _check_shards(c, ref, rank, f"N={n_cols}")
+        if hb is not None:
+            hb.tick()
     print(f"[rank {rank}] smoke N=8,16 == dense reference  OK", flush=True)
 
     # drift -> replan hot-swap, multi-controller: every host replans
     # deterministically, the swapped handle serves the same fleet
+    stage("replan")
     a2 = power_law_sparse(128, 128, 1024, 1.3, seed=7)
     drift, replanned = session.maybe_replan(a2)
     assert replanned, f"expected a replan, drift={drift}"
     b = rng.standard_normal((128, 8)).astype(np.float32)
     _check_shards(session.handle()(b), a2.to_dense() @ b, rank, "replan")
     print(f"[rank {rank}] drift={drift:.2f} replan hot-swap OK", flush=True)
+    stage("done")
+    if hb is not None:
+        hb.stop()
     # leave the barrier to the launcher's wait(): exiting early is fine,
     # the coordination service tears down when every worker is done
 
@@ -180,6 +359,209 @@ def launch_local(nproc: int, local_devices: int, timeout: float = 600.0
     return rc
 
 
+# ---------------------------------------------------------------------------
+# supervised fleet recovery
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SupervisorPolicy:
+    """Recovery knobs (each with an env override, see ``from_env``).
+
+    ``heartbeat_timeout``  seconds without main-thread progress before a
+                           live worker counts as stalled.
+    ``max_restarts``       full-fleet relaunches per fleet size before
+                           degrading to a smaller fleet.
+    ``backoff``            base of the exponential restart backoff;
+                           capped at ``backoff_max``.
+    ``timeout``            wall-clock bound per fleet launch — the
+                           supervisor's promise to never hang.
+    """
+
+    heartbeat_timeout: float = 90.0
+    max_restarts: int = 2
+    backoff: float = 0.5
+    backoff_max: float = 10.0
+    poll: float = 0.2
+    timeout: float = 600.0
+
+    @classmethod
+    def from_env(cls, **overrides) -> "SupervisorPolicy":
+        kw = {
+            "heartbeat_timeout": float(os.environ.get(
+                HEARTBEAT_TIMEOUT_ENV, cls.heartbeat_timeout)),
+            "max_restarts": int(os.environ.get(
+                MAX_RESTARTS_ENV, cls.max_restarts)),
+            "backoff": float(os.environ.get(BACKOFF_ENV, cls.backoff)),
+        }
+        kw.update({k: v for k, v in overrides.items() if v is not None})
+        return cls(**kw)
+
+
+class Supervisor:
+    """Heartbeat-watching fleet supervisor: restart, then degrade.
+
+    One ``run()`` drives launches until either a fleet finishes clean
+    (exit 0) or recovery is exhausted down to a failing single process
+    (exit 1). Per incident (worker died / stalled / fleet timeout) the
+    surviving processes are killed — a dead rank leaves siblings blocked
+    in collectives — and the whole fleet relaunches with a fresh
+    coordinator, a bumped fault epoch (``REPRO_FAULTS_EPOCH``), and
+    exponential backoff. After ``policy.max_restarts`` failures at one
+    fleet size the supervisor relaunches with ``nproc - 1`` processes:
+    workers rebuild over the same ``REPRO_MP_LADDER`` and ``on_resize``
+    onto the largest surviving rung (graceful degradation, not an
+    error). ``spawn`` is injectable so the recovery logic is testable
+    with fake workers and no jax fleet.
+    """
+
+    def __init__(self, nproc: int, local_devices: int,
+                 policy: Optional[SupervisorPolicy] = None, spawn=None):
+        self.nproc = int(nproc)
+        self.local_devices = int(local_devices)
+        self.policy = policy or SupervisorPolicy.from_env()
+        self.spawn = spawn or self._spawn_worker
+        self.report: dict = {"restarts": 0, "epoch": 0,
+                             "nproc": self.nproc, "degraded": False,
+                             "incidents": []}
+
+    # -- spawning -------------------------------------------------------
+
+    def _ladder_env(self) -> str:
+        """The full P-ladder every (possibly degraded) fleet size serves
+        a rung of: one rung per surviving process count."""
+        return ",".join(str(n * self.local_devices)
+                        for n in range(1, self.nproc + 1))
+
+    def _spawn_worker(self, rank: int, nproc: int, epoch: int,
+                      coord: str, rundir: str) -> subprocess.Popen:
+        env = dict(os.environ,
+                   REPRO_MP_COORD=coord,
+                   REPRO_MP_NPROC=str(nproc),
+                   REPRO_MP_RANK=str(rank),
+                   REPRO_MP_LOCAL_DEVICES=str(self.local_devices),
+                   **{RUNDIR_ENV: rundir,
+                      LADDER_ENV: self._ladder_env(),
+                      faults.EPOCH_ENV: str(epoch)})
+        if nproc < self.nproc:
+            env[DEGRADED_ENV] = (f"{self.nproc * self.local_devices}->"
+                                 f"{nproc * self.local_devices}")
+        return subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.multiprocess"], env=env)
+
+    # -- watching -------------------------------------------------------
+
+    def _watch(self, procs: Dict[int, subprocess.Popen], rundir: str
+               ) -> Optional[Tuple[str, Optional[int], str]]:
+        """Block until the fleet finishes clean (None) or an incident
+        ``(kind, rank, detail)`` occurs. Deadline-bounded — never hangs."""
+        pol = self.policy
+        start = time.time()
+        deadline = start + pol.timeout
+        while True:
+            alive = False
+            for rank, p in procs.items():
+                rc = p.poll()
+                if rc is None:
+                    alive = True
+                elif rc != 0:
+                    return ("died", rank, f"exit {rc}")
+            if not alive:
+                return None  # every worker exited 0
+            now = time.time()
+            if now > deadline:
+                return ("timeout", None,
+                        f"fleet exceeded {pol.timeout:.0f}s")
+            for rank, p in procs.items():
+                if p.poll() is not None:
+                    continue
+                hb = read_heartbeat(rundir, rank)
+                ref = float((hb or {}).get("progress_time") or start)
+                if now - ref > pol.heartbeat_timeout:
+                    at = (hb or {}).get("stage", "<no heartbeat>")
+                    return ("stalled", rank,
+                            f"no progress for {now - ref:.1f}s at "
+                            f"stage {at!r}")
+            time.sleep(pol.poll)
+
+    @staticmethod
+    def _kill_fleet(procs: Dict[int, subprocess.Popen]) -> None:
+        for p in procs.values():
+            if p.poll() is None:
+                p.terminate()
+        deadline = time.time() + 5.0
+        for p in procs.values():
+            while p.poll() is None and time.time() < deadline:
+                time.sleep(0.05)
+            if p.poll() is None:
+                p.kill()
+            try:
+                p.wait(timeout=5.0)
+            except Exception:
+                pass
+
+    # -- the recovery loop ----------------------------------------------
+
+    def run(self) -> int:
+        pol = self.policy
+        nproc = self.nproc
+        epoch = 0
+        restarts_at_size = 0
+        while True:
+            rundir = tempfile.mkdtemp(prefix="repro_mp_hb_")
+            coord = f"127.0.0.1:{_free_port()}"
+            procs = {r: self.spawn(r, nproc, epoch, coord, rundir)
+                     for r in range(nproc)}
+            incident = self._watch(procs, rundir)
+            self._kill_fleet(procs)
+            shutil.rmtree(rundir, ignore_errors=True)
+            self.report["epoch"] = epoch
+            self.report["nproc"] = nproc
+            if incident is None:
+                total = self.report["restarts"]
+                if self.report["degraded"]:
+                    print(f"supervisor: recovered DEGRADED — fleet "
+                          f"nproc={nproc} after {total} restart(s), "
+                          f"serving the surviving rung  OK", flush=True)
+                elif total:
+                    print(f"supervisor: recovered after {total} "
+                          f"restart(s) (nproc={nproc})  OK", flush=True)
+                else:
+                    print(f"supervisor: fleet healthy "
+                          f"(nproc={nproc}, no incidents)  OK", flush=True)
+                return 0
+            kind, rank, detail = incident
+            self.report["incidents"].append(
+                {"kind": kind, "rank": rank, "detail": detail,
+                 "epoch": epoch})
+            who = f"worker {rank}" if rank is not None else "fleet"
+            print(f"supervisor: {who} {kind} ({detail}) in epoch {epoch}",
+                  file=sys.stderr, flush=True)
+            epoch += 1
+            if restarts_at_size < pol.max_restarts:
+                restarts_at_size += 1
+                self.report["restarts"] += 1
+                delay = min(pol.backoff * 2.0 ** (restarts_at_size - 1),
+                            pol.backoff_max)
+                print(f"supervisor: restarting fleet (attempt "
+                      f"{restarts_at_size}/{pol.max_restarts}, backoff "
+                      f"{delay:.1f}s)", file=sys.stderr, flush=True)
+                time.sleep(delay)
+                continue
+            if nproc > 1:
+                nproc -= 1
+                restarts_at_size = 0
+                self.report["degraded"] = True
+                print(f"supervisor: restarts exhausted — degrading to "
+                      f"nproc={nproc} (ladder rung "
+                      f"P={nproc * self.local_devices} serves the "
+                      f"surviving devices)", file=sys.stderr, flush=True)
+                continue
+            print("supervisor: restarts exhausted at nproc=1; giving up",
+                  file=sys.stderr, flush=True)
+            return 1
+
+
 def main() -> None:
     if os.environ.get("REPRO_MP_RANK") is not None:
         worker_smoke()
@@ -190,7 +572,31 @@ def main() -> None:
     ap.add_argument("--local-devices", type=int, default=4,
                     help="placeholder host devices per worker process")
     ap.add_argument("--timeout", type=float, default=600.0)
+    ap.add_argument("--supervise", action="store_true",
+                    help="wrap the launch in heartbeat-watching fleet "
+                         "recovery (restart with backoff, then degrade)")
+    ap.add_argument("--max-restarts", type=int, default=None,
+                    help=f"fleet relaunches per size before degrading "
+                         f"(default {SupervisorPolicy.max_restarts}; env "
+                         f"{MAX_RESTARTS_ENV})")
+    ap.add_argument("--heartbeat-timeout", type=float, default=None,
+                    help=f"stall detection threshold in seconds (default "
+                         f"{SupervisorPolicy.heartbeat_timeout}; env "
+                         f"{HEARTBEAT_TIMEOUT_ENV})")
+    ap.add_argument("--backoff", type=float, default=None,
+                    help=f"restart backoff base in seconds (default "
+                         f"{SupervisorPolicy.backoff}; env {BACKOFF_ENV})")
     args = ap.parse_args()
+    if args.supervise:
+        policy = SupervisorPolicy.from_env(
+            max_restarts=args.max_restarts,
+            heartbeat_timeout=args.heartbeat_timeout,
+            backoff=args.backoff, timeout=args.timeout)
+        rc = Supervisor(args.nproc, args.local_devices,
+                        policy=policy).run()
+        if rc:
+            raise SystemExit(rc)
+        return
     rc = launch_local(args.nproc, args.local_devices, timeout=args.timeout)
     if rc:
         raise SystemExit(rc)

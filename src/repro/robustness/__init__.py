@@ -1,0 +1,27 @@
+"""Fault injection + guardrails: the robustness layer.
+
+``faults`` schedules deterministic failures (worker kill, collective
+delay, torn writes, cache corruption, NaN poisoning) against named fire
+sites across the stack; ``guards`` owns the ``SpmmConfig.check``
+validation the serving path runs against real-world bad inputs. See
+each module's docstring for the full contract.
+"""
+from .faults import (  # noqa: F401
+    FAULTS_ENV, EPOCH_ENV, KILL_EXIT_CODE, Fault, FaultPlan,
+    InjectedFault, active_plan, inject, install, uninstall,
+)
+from .guards import NumericalFault  # noqa: F401
+
+__all__ = [
+    "FAULTS_ENV",
+    "EPOCH_ENV",
+    "KILL_EXIT_CODE",
+    "Fault",
+    "FaultPlan",
+    "InjectedFault",
+    "NumericalFault",
+    "active_plan",
+    "inject",
+    "install",
+    "uninstall",
+]

@@ -92,8 +92,25 @@ class ElasticController:
         self.spmm_sessions.append(session)
 
     def _notify_spmm(self, n_devices: int) -> None:
+        from ..distributed.topology import TopologyError
+
         for session in self.spmm_sessions:
-            handle = session.on_resize(n_devices)
+            try:
+                handle = session.on_resize(n_devices)
+            except TopologyError as e:
+                # census fell below the session's smallest rung: that
+                # session cannot serve, but the CONTROLLER must keep
+                # driving the rest of the fleet (dense remesh, other
+                # sessions) — record the halt instead of crashing the
+                # census handler; the session keeps its last valid rung
+                # for when capacity returns
+                self.events.append({"census": n_devices,
+                                    "action": "spmm_halt",
+                                    "ladder": session.ladder,
+                                    "reason": str(e)})
+                log.warning("spmm session halted at census %d: %s",
+                            n_devices, e)
+                continue
             self.events.append({"census": n_devices, "action": "spmm_rung",
                                 "rung": handle.plan.P,
                                 "ladder": session.ladder})

@@ -19,11 +19,14 @@ from repro.core.api import (  # noqa: F401
 )
 from repro.core.session import SpmmSession  # noqa: F401
 from repro.distributed.topology import Topology, TopologyError  # noqa: F401
+from repro.robustness import FaultPlan, NumericalFault  # noqa: F401
 
 compile = compile_spmm  # noqa: A001 — the intended public spelling
 
 __all__ = [
     "DistSpmm",
+    "FaultPlan",
+    "NumericalFault",
     "SpmmConfig",
     "SpmmSession",
     "Topology",

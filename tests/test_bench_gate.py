@@ -108,6 +108,48 @@ def test_crash_emits_partial_records_error_field_and_exit_2(
     assert by_bench["BENCH_fake/ok"]["padded_rows"] == 10  # partial rows ship
 
 
+def test_family_timeout_emits_error_record_and_exit_2(
+        monkeypatch, tmp_path):
+    import threading
+
+    import benchmarks
+
+    mod = types.ModuleType("benchmarks.fake")
+
+    def _run():
+        yield "fake/ok,1.0,padded_rows=10"
+        threading.Event().wait()  # a wedged benchmark: hangs forever
+
+    mod.run = _run
+    monkeypatch.setattr(benchmarks, "fig5_patterns", mod, raising=False)
+    out = tmp_path / "bench.json"
+    with pytest.raises(SystemExit) as exc:
+        runner.main(["--only", "fake", "--json", str(out),
+                     "--family-timeout", "0.3"])
+    assert exc.value.code == runner.EXIT_CRASHED
+    records = json.loads(out.read_text())["records"]
+    by_bench = {r["bench"]: r for r in records}
+    assert "TimeoutError" in by_bench["BENCH_fake"]["error"]
+    assert "hung" in by_bench["BENCH_fake"]["error"]
+    assert by_bench["BENCH_fake/ok"]["padded_rows"] == 10  # partials ship
+
+
+def test_family_timeout_not_hit_is_a_clean_pass(monkeypatch, capsys):
+    import benchmarks
+
+    fake = _fake_module(["fake/ok,1.0,padded_rows=10"])
+    monkeypatch.setattr(benchmarks, "fig5_patterns", fake, raising=False)
+    runner.main(["--only", "fake", "--family-timeout", "30"])  # no exit
+    assert "fake/ok,1.0,padded_rows=10" in capsys.readouterr().out
+
+
+def test_family_timeout_env_default(monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_FAMILY_TIMEOUT", "12.5")
+    assert runner._env_family_timeout() == 12.5
+    monkeypatch.delenv("REPRO_BENCH_FAMILY_TIMEOUT")
+    assert runner._env_family_timeout() is None
+
+
 def test_regression_exit_code_is_1(monkeypatch, tmp_path):
     import benchmarks
 

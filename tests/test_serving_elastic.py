@@ -166,6 +166,61 @@ def test_grow_shrink_drift_hot_swap_serving(power_law_matrix):
     assert session.handle().stats()["drift"] == drift
 
 
+def test_chaos_kill_degrade_drift_replan_serving(power_law_matrix):
+    """The robustness scenario: grow to the full fleet, lose it mid-wave
+    (injected ``wave_error`` faults standing in for the killed rung),
+    retry down the ladder to the SURVIVING rung, then take a drift
+    replan — all with ``dropped_waves == 0`` and every wave's C
+    bit-identical to a cold build on the (P, pattern) it was served
+    under."""
+    from repro.core.api import SpmmConfig, compile_spmm
+    from repro.core.session import SpmmSession
+    from repro.core.sparse import power_law_sparse
+    from repro.robustness import Fault, inject
+
+    a = power_law_matrix()
+    cfg = SpmmConfig(schedule="auto")
+    session = SpmmSession.build(a, 8, cfg, p_ladder=(4, 8))
+    ctl = ElasticController(get_smoke_config("qwen2-1.5b"), global_batch=8)
+    ctl.attach_spmm(session)
+    ctl.on_census(8)  # grow to the full fleet
+    assert session.current_P == 8
+    server = SpmmWaveServer(session, max_batch=4, max_retries=2,
+                            backoff=0.0)
+    b = np.random.default_rng(3).standard_normal((64, 16)).astype(np.float32)
+    reqs = [SpmmRequest(rid=i, b=b) for i in range(3)]
+    for r in reqs:
+        server.submit(r)
+
+    # the P=8 rung fails twice (the "killed worker"): first retry
+    # re-resolves, second drives the session down to the surviving rung
+    with inject([Fault(kind="wave_error", site="wave", times=2)]) as plan:
+        server.run()
+    assert plan.fired("wave_error") == 2
+    stats = server.stats
+    assert stats.failed_waves == 2 and stats.retried_waves == 1
+    assert stats.degraded_rungs == 1 and stats.dropped_waves == 0
+    assert session.current_P == 4  # degraded to the surviving rung
+    cold_4 = compile_spmm(a, 4, cfg)
+    for r in reqs:
+        np.testing.assert_array_equal(r.output, np.asarray(cold_4(b)))
+
+    # capacity returns, then the pattern drifts: a replan serves clean
+    session.on_resize(8)
+    a_new = power_law_sparse(64, 64, 400, 1.2, seed=91)
+    drift, swapped = session.maybe_replan(a_new)
+    assert swapped and drift > cfg.drift_threshold
+    reqs2 = [SpmmRequest(rid=10 + i, b=b) for i in range(2)]
+    for r in reqs2:
+        server.submit(r)
+    server.run()
+    cold_new = compile_spmm(a_new, 8, cfg)
+    for r in reqs2:
+        np.testing.assert_array_equal(r.output, np.asarray(cold_new(b)))
+    assert server.stats.dropped_waves == 0
+    assert server.stats.served == 5
+
+
 # ---------------------------------------------------------------------------
 
 
