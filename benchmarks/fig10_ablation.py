@@ -57,6 +57,7 @@ def run() -> list:
                 f"strategy={st['strategy']};"
                 f"schedule={st['schedule_kind']};K={st['schedule_K']};"
                 f"overlap={st['overlap']};"
+                f"kernel={st['kernel']};"
                 f"backend={st['default_backend']}"))
         sp = results["col"] / max(results["joint+hier+sched+ovl"], 1e-9)
         rows.append(fmt_row(f"fig10/{ds}/speedup", 0.0,

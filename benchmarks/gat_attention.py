@@ -1,0 +1,105 @@
+"""Fused GAT attention: SDDMM + SpMM in one comm phase vs two (beyond-paper).
+
+Per dataset family at P=8: fused and unfused move IDENTICAL bytes — the
+joint [Y|B] gather carries width F+N over exactly the rows an SDDMM
+phase (width F) plus an SpMM phase (width N) would move separately — so
+what fusion saves is latency terms: per bucketed round the unfused
+composition pays two gather α's where the fused executor pays one. The
+``modeled`` rows pin both totals (gated via ``modeled_time`` +
+``padded_rows``); the ``measured`` rows time the two executors on the
+same exec plan with the GAT edge nonlinearity applied between phases,
+and the ``handle`` row records what the ``kernel="fused"`` front door
+decided for the matrix.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.api import SpmmConfig, compile_fused
+from repro.core.comm_model import (
+    TSUBAME_LIKE, modeled_time_fused_schedule, modeled_time_schedule,
+)
+from repro.core.comm_schedule import build_comm_schedule
+from repro.core.dist_sddmm import flat_fused, flat_sddmm, flat_spmm_values
+from repro.core.dist_spmm import flat_exec_arrays
+from repro.core.planner import build_plan
+from repro.launch.mesh import make_spmm_mesh
+
+from .common import DATASETS, fmt_row, time_call
+
+P = 8
+F_ATT = 16   # Q/K attention width (the SDDMM phase)
+N_DENSE = 64  # V width (the SpMM phase)
+SMOKE_DATASETS = ("social-pl", "mawi-hub")  # the CI smoke subset
+
+
+def run(datasets=None) -> list:
+    import jax
+    import jax.numpy as jnp
+
+    rows = []
+    if datasets is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+        datasets = SMOKE_DATASETS if smoke else list(DATASETS)
+    rng = np.random.default_rng(0)
+    mesh = make_spmm_mesh(P)
+    net = TSUBAME_LIKE
+    for ds in datasets:
+        a = DATASETS[ds](0)
+        plan = build_plan(a, P, "joint")
+        for K in (1, 4):
+            sched = build_comm_schedule(plan, K=K)
+            # unfused = an SDDMM pass (width F) then an SpMM pass
+            # (width N) over the same schedule; fused = one joint pass
+            t_unfused = (modeled_time_schedule(plan, sched, F_ATT, net)
+                         + modeled_time_schedule(plan, sched, N_DENSE, net))
+            t_fused = modeled_time_fused_schedule(plan, sched, F_ATT,
+                                                  N_DENSE, net)
+            rows.append(fmt_row(
+                f"gat/{ds}/modeled-K{K}", 0.0,
+                f"modeled_time={t_fused:.3e};"
+                f"modeled_time_unfused={t_unfused:.3e};"
+                f"padded_rows={sched.volume_rows_padded()};"
+                f"alpha_saved_frac="
+                f"{(t_unfused - t_fused) / max(t_unfused, 1e-30):.3f};"
+                f"kernel=fused"))
+
+        # measured: same exec plan, one comm phase vs two
+        sched = build_comm_schedule(plan, K=4)
+        ex = flat_exec_arrays(plan, schedule=sched)
+        q = jnp.asarray(
+            rng.standard_normal((a.shape[0], F_ATT)).astype(np.float32))
+        k = jnp.asarray(
+            rng.standard_normal((a.shape[1], F_ATT)).astype(np.float32))
+        v = jnp.asarray(
+            rng.standard_normal((a.shape[1], N_DENSE)).astype(np.float32))
+
+        fn_fused = jax.jit(lambda qq, kk, vv: flat_fused(
+            ex, qq, kk, vv, mesh, edge="leaky_relu"))
+        fn_unfused = jax.jit(lambda qq, kk, vv: flat_spmm_values(
+            ex, flat_sddmm(ex, qq, kk, mesh, edge="leaky_relu"), vv, mesh))
+        np.testing.assert_allclose(np.asarray(fn_fused(q, k, v)),
+                                   np.asarray(fn_unfused(q, k, v)),
+                                   rtol=2e-3, atol=2e-3)
+        us_fused = time_call(fn_fused, q, k, v, warmup=2, iters=5)
+        us_unfused = time_call(fn_unfused, q, k, v, warmup=2, iters=5)
+        rows.append(fmt_row(f"gat/{ds}/measured-fused", us_fused,
+                            "kernel=fused;K=4"))
+        rows.append(fmt_row(f"gat/{ds}/measured-unfused", us_unfused,
+                            "kernel=sddmm+spmm;K=4"))
+
+        # what the fused front door decides (model-only: deterministic
+        # even when an autotune cache dir is configured)
+        h = compile_fused(a, P, SpmmConfig(kernel="fused", schedule="auto",
+                                           measure=False, edge="leaky_relu",
+                                           n_dense_hint=N_DENSE))
+        st = h.stats()
+        rows.append(fmt_row(
+            f"gat/{ds}/handle", 0.0,
+            f"kernel={st['kernel']};edge={st['edge']};"
+            f"kind={st['schedule_kind']};K={st['schedule_K']};"
+            f"modeled_time={st['modeled_time_fused']:.3e};"
+            f"padded_rows={st['volume_rows_padded']}"))
+    return rows

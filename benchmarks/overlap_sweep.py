@@ -90,7 +90,7 @@ def run(datasets=None) -> list:
         rows.append(fmt_row(
             f"overlap/{ds}/chosen", 0.0,
             f"overlap={st['overlap']};kind={st['schedule_kind']};"
-            f"K={st['schedule_K']};"
+            f"K={st['schedule_K']};kernel={st['kernel']};"
             f"modeled_time_staged={st['modeled_time_staged']:.3e};"
             f"modeled_time_overlap={st['modeled_time_overlap']:.3e}"))
 

@@ -15,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV. Figures covered:
   Tab. 3  GNN case study + prep overhead   (table3_gnn)
   extra   SHIRO MoE dispatch (beyond-paper) (moe_dispatch)
   extra   bucketed-schedule padding sweep   (sched_buckets)
+  extra   fused GAT attention (SDDMM+SpMM)  (gat_attention)
 
 Flags:
   --only MODULE   run a subset (repeatable; short names, e.g.
@@ -100,6 +101,9 @@ def _records(rows) -> list:
         name, us, derived = row.split(",", 2)
         rec = {"bench": f"BENCH_{name}", "us_per_call": float(us)}
         rec.update(_parse_derived(derived))
+        # every record names the kernel family it measured; rows predating
+        # the sddmm/fused siblings are plain spmm
+        rec.setdefault("kernel", "spmm")
         recs.append(rec)
     return recs
 
@@ -186,11 +190,11 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from . import (fig5_patterns, fig7_scaling, fig8_volume, fig9_balance,
-                   fig10_ablation, fig11_ncols, table3_gnn, moe_dispatch,
-                   overlap_sweep, sched_buckets)
+                   fig10_ablation, fig11_ncols, table3_gnn, gat_attention,
+                   moe_dispatch, overlap_sweep, sched_buckets)
     modules = [fig5_patterns, fig7_scaling, fig8_volume, fig9_balance,
                fig10_ablation, fig11_ncols, table3_gnn, moe_dispatch,
-               sched_buckets, overlap_sweep]
+               sched_buckets, overlap_sweep, gat_attention]
     if args.only:
         short = {m.__name__.rsplit(".", 1)[-1]: m for m in modules}
         unknown = [o for o in args.only if o not in short]

@@ -1,0 +1,83 @@
+"""End-to-end GAT training on the fused SHIRO SDDMM+SpMM kernel.
+
+    PYTHONPATH=src python examples/gat_training.py [--epochs 50]
+
+Trains a full-batch 2-layer GAT whose per-edge attention
+(``leaky_relu(q_i · k_j)`` on the adjacency pattern) and aggregation run
+through ONE ``kernel="fused"`` DistSpmm handle per layer — the SDDMM and
+SpMM phases share a single communication phase on the same joint plan an
+SpMM handle would use. The attention is the benchmark-style unnormalized
+form (no per-row softmax); gradients flow through the fused executor
+inside the jitted training step.
+"""
+import argparse
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SpmmConfig, compile_fused
+from repro.models.gnn import (
+    GAT, gat_forward, gat_loss, normalize_adjacency,
+)
+from repro.core.sparse import power_law_sparse
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=50)
+    ap.add_argument("--nodes", type=int, default=1024)
+    ap.add_argument("--edges", type=int, default=16384)
+    ap.add_argument("--procs", type=int, default=8)
+    args = ap.parse_args()
+
+    print(f"graph: {args.nodes} nodes, ~{args.edges} edges, P={args.procs}")
+    adj = normalize_adjacency(
+        power_law_sparse(args.nodes, args.nodes, args.edges, 1.4, 0))
+
+    t0 = time.perf_counter()
+    handle = compile_fused(adj, args.procs,
+                           SpmmConfig(kernel="fused", edge="leaky_relu",
+                                      schedule="auto"))
+    prep_s = time.perf_counter() - t0
+    st = handle.stats()
+    print(f"fused handle: kernel={st['kernel']} edge={st['edge']} "
+          f"schedule={st['schedule_kind']}/K={st['schedule_K']} "
+          f"({prep_s:.2f}s prep); one comm phase serves both the SDDMM "
+          f"attention and the SpMM aggregation")
+
+    gat = GAT(args.nodes, 64, 128, 16, att_dim=16)
+    params = gat.init(jax.random.PRNGKey(0))
+    feats = jax.random.normal(jax.random.PRNGKey(1), (args.nodes, 64))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (args.nodes,), 0, 16)
+    opt_cfg = AdamWConfig(lr=5e-3, weight_decay=0.0, warmup_steps=10,
+                          total_steps=args.epochs)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(gat_loss)(p, feats, labels, handle)
+        p2, o2, _ = adamw_update(opt_cfg, p, g, o)
+        return p2, o2, loss
+
+    params, opt, loss = step(params, opt)  # compile
+    jax.block_until_ready(loss)
+    t0 = time.perf_counter()
+    for ep in range(args.epochs):
+        params, opt, loss = step(params, opt)
+        if ep % max(args.epochs // 10, 1) == 0:
+            print(f"  epoch {ep:4d}  loss {float(loss):.4f}")
+    jax.block_until_ready(loss)
+    train_s = time.perf_counter() - t0
+    acc = float(jnp.mean(jnp.argmax(
+        gat_forward(params, feats, handle), -1) == labels))
+    print(f"training: {train_s:.2f}s ({train_s / args.epochs * 1e3:.1f}ms/"
+          f"epoch); final loss {float(loss):.4f}; train acc {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

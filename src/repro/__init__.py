@@ -14,13 +14,16 @@ paper-branded alias lives in the sibling ``shiro`` package
 """
 __version__ = "0.7.0"  # stamped into autotune cache keys (core.autotune)
 
-__all__ = ["SpmmConfig", "DistSpmm", "compile_spmm", "SpmmSession",
-           "Topology", "FaultPlan", "NumericalFault"]
+__all__ = ["SpmmConfig", "DistSpmm", "compile_spmm", "compile_sddmm",
+           "compile_fused", "SpmmSession", "Topology", "FaultPlan",
+           "NumericalFault"]
 
 _HOMES = {
     "SpmmConfig": "core.api",
     "DistSpmm": "core.api",
     "compile_spmm": "core.api",
+    "compile_sddmm": "core.api",
+    "compile_fused": "core.api",
     "SpmmSession": "core.session",
     "Topology": "distributed.topology",
     "FaultPlan": "robustness",

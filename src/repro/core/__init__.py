@@ -41,6 +41,8 @@ from .comm_model import (
     choose_schedule,
     modeled_time_hier_schedule, modeled_time_hier_staged,
     modeled_time_hier_overlap, choose_hier_schedule,
+    modeled_time_fused_schedule, modeled_time_hier_fused_schedule,
+    choose_fused_schedule, choose_hier_fused_schedule,
 )
 from .comm_schedule import (
     CommRound, CommSchedule, build_comm_schedule, build_hier_comm_schedule,
@@ -51,8 +53,12 @@ from .dist_spmm import (
     hier_exec_arrays, flat_spmm, hier_spmm, coo_spmm_local,
 )
 from .api import (
-    SpmmConfig, DistSpmm, compile_spmm, make_spmm_fn,
-    register_lowering_hook, unregister_lowering_hook,
+    SpmmConfig, DistSpmm, compile_spmm, compile_sddmm, compile_fused,
+    make_spmm_fn, register_lowering_hook, unregister_lowering_hook,
+)
+from .dist_sddmm import (
+    EDGE_FNS, flat_sddmm, hier_sddmm, flat_fused, hier_fused,
+    fused_sddmm_spmm,
 )
 from .autotune import (
     AutotuneCache, measurement_enabled,
@@ -79,12 +85,17 @@ __all__ = [
     "choose_schedule",
     "modeled_time_hier_schedule", "modeled_time_hier_staged",
     "modeled_time_hier_overlap", "choose_hier_schedule",
+    "modeled_time_fused_schedule", "modeled_time_hier_fused_schedule",
+    "choose_fused_schedule", "choose_hier_fused_schedule",
     "CommRound", "CommSchedule", "build_comm_schedule",
     "build_hier_comm_schedule", "single_round_schedule",
     "single_round_hier_schedule",
     "BackendSpec", "FlatExecPlan", "HierExecPlan", "flat_exec_arrays",
     "hier_exec_arrays", "flat_spmm", "hier_spmm", "coo_spmm_local",
-    "SpmmConfig", "DistSpmm", "compile_spmm", "make_spmm_fn",
+    "EDGE_FNS", "flat_sddmm", "hier_sddmm", "flat_fused", "hier_fused",
+    "fused_sddmm_spmm",
+    "SpmmConfig", "DistSpmm", "compile_spmm", "compile_sddmm",
+    "compile_fused", "make_spmm_fn",
     "register_lowering_hook", "unregister_lowering_hook",
     "AutotuneCache", "measurement_enabled",
     "register_profile_hook", "unregister_profile_hook",

@@ -71,14 +71,19 @@ from ..distributed.topology import Topology
 from ..launch.hlo_analysis import executable_memory
 from ..robustness import faults, guards
 from .comm_model import (
-    NetworkSpec, choose_hier_schedule, choose_schedule,
-    modeled_time, modeled_time_hier, modeled_time_hier_overlap,
+    NetworkSpec, choose_fused_schedule, choose_hier_fused_schedule,
+    choose_hier_schedule, choose_schedule,
+    modeled_time, modeled_time_fused_schedule, modeled_time_hier,
+    modeled_time_hier_fused_schedule, modeled_time_hier_overlap,
     modeled_time_hier_schedule, modeled_time_hier_staged,
     modeled_time_overlap, modeled_time_schedule, modeled_time_staged,
 )
 from .comm_schedule import (
     CommSchedule, build_comm_schedule, build_hier_comm_schedule,
     single_round_hier_schedule, single_round_schedule,
+)
+from .dist_sddmm import (
+    EDGE_FNS, flat_fused, flat_sddmm, hier_fused, hier_sddmm,
 )
 from .dist_spmm import (
     BackendSpec, FlatExecPlan, HierExecPlan, flat_exec_arrays, flat_spmm,
@@ -93,12 +98,17 @@ __all__ = [
     "SpmmConfig",
     "DistSpmm",
     "compile_spmm",
+    "compile_sddmm",
+    "compile_fused",
     "make_spmm_fn",
     "register_lowering_hook",
     "unregister_lowering_hook",
 ]
 
 _SCHEDULE_POLICIES = ("auto", "single")
+_KERNELS = ("spmm", "sddmm", "fused")
+# per-call ``edge=`` default: "not passed" (fall back to the config's edge)
+_UNSET = object()
 _SAVE_FORMAT = "shiro.DistSpmm"
 # v1: PR 3 (no pattern snapshot). v2: adds the planned-pattern snapshot
 # (drift detection) and records the planning topology. Loaders reject
@@ -106,9 +116,11 @@ _SAVE_FORMAT = "shiro.DistSpmm"
 _SAVE_VERSION = 2
 _KNOWN_VERSIONS = (1, 2)
 
-# hooks called as hook(handle, (n_cols, dtype_name, backend)) each time the
-# handle lowers+compiles a NEW executable — tests count cache behavior here
-_LOWERING_HOOKS: List[Callable[["DistSpmm", Tuple[int, str, str]], None]] = []
+# hooks called as hook(handle, key) each time the handle lowers+compiles a
+# NEW executable — tests count cache behavior here. Keys are
+# (n_cols, dtype_name, backend) for spmm calls and "sddmm"/"fused"-tagged
+# tuples for the sibling kernels (see ``DistSpmm._executable`` et al.).
+_LOWERING_HOOKS: List[Callable[["DistSpmm", Tuple[Any, ...]], None]] = []
 
 
 def register_lowering_hook(fn: Callable) -> Callable:
@@ -126,6 +138,22 @@ class SpmmConfig:
     """Everything ``compile_spmm`` needs beyond the matrix and the mesh.
 
     ``strategy``       planner cover strategy ('block'|'col'|'row'|'joint').
+    ``kernel``         which kernel family calls run by default:
+                       ``"spmm"`` (C = A @ B), ``"sddmm"`` (sampled
+                       dense-dense: values = A ⊙ (X Yᵀ) on A's pattern)
+                       or ``"fused"`` (FusedMM:
+                       C = edge(A ⊙ (X Yᵀ)) @ B through ONE
+                       communication phase). All three share the same
+                       plan/schedule; per-call selectable like
+                       ``backend=``: ``h(x, y, b, kernel="fused")``.
+                       Non-spmm kernels always execute staged
+                       (``overlap`` does not apply) and skip B-buffer
+                       donation.
+    ``edge``           zero-preserving edge nonlinearity applied to the
+                       sampled values before the SpMM phase of
+                       ``"sddmm"``/``"fused"`` calls — a name from
+                       ``dist_sddmm.EDGE_FNS`` (e.g. ``"leaky_relu"``
+                       for GAT-style attention) or None (identity).
     ``hier``           None = flat executor; ``(G, L)`` forces the two-tier
                        executor; ``"auto"`` derives (G, L) from
                        ``net.group_size`` and keeps it iff the α-β model
@@ -196,6 +224,8 @@ class SpmmConfig:
     """
 
     strategy: Strategy = "joint"
+    kernel: str = "spmm"
+    edge: Optional[str] = None
     hier: Union[str, Tuple[int, int], None] = None
     backends: Tuple[BackendSpec, ...] = ("coo",)
     default_backend: Optional[str] = None
@@ -215,6 +245,18 @@ class SpmmConfig:
     check: Union[str, bool] = "auto"
 
     def __post_init__(self) -> None:
+        if self.kernel not in _KERNELS:
+            raise ValueError(
+                f"kernel must be one of {_KERNELS}; got {self.kernel!r}")
+        if self.edge is not None:
+            if self.edge not in EDGE_FNS:
+                raise ValueError(
+                    f"edge must be None or one of "
+                    f"{tuple(sorted(EDGE_FNS))}; got {self.edge!r}")
+            if self.kernel == "spmm":
+                raise ValueError(
+                    "edge= applies to the sampled values of "
+                    "kernel='sddmm'/'fused'; kernel='spmm' has none")
         if self.check not in ("auto", "full", True, False):
             raise ValueError(
                 f"check must be 'auto', 'full', True or False; "
@@ -312,6 +354,10 @@ class DistSpmm:
         # autotuned execution mode: round-pipelined vs staged (decided in
         # compile_spmm, rides through save/load inside ``decisions``)
         self.overlap = bool(self.decisions.get("overlap", False))
+        # default kernel family + edge nonlinearity (older pickled
+        # configs predate the fields -> plain spmm)
+        self.kernel = getattr(config, "kernel", "spmm")
+        self.edge = getattr(config, "edge", None)
         self.default_backend = (config.default_backend
                                 or self.decisions.get("backend")
                                 or config.backend_names()[0])
@@ -319,11 +365,15 @@ class DistSpmm:
             raise ValueError(
                 f"default_backend {self.default_backend!r} not among "
                 f"prepared backends {self.ex.backends}")
-        # (n_cols, dtype_name, backend) -> compiled executable
-        self._executables: Dict[Tuple[int, str, str], Any] = {}
-        # (n_cols, dtype_name, backend) -> executable_memory() profile
-        self._memory: Dict[Tuple[int, str, str], Dict[str, int]] = {}
-        self.lowerings: List[Tuple[int, str, str]] = []
+        # key -> compiled executable; spmm keys are (n_cols, dtype_name,
+        # backend) — unchanged since PR 3 so saved working sets stay
+        # warmable — sibling kernels use tagged tuples:
+        #   ("sddmm", F, dtype_x, dtype_y, backend, edge)
+        #   ("fused", F, N, dtype_x, dtype_y, dtype_b, backend, edge)
+        self._executables: Dict[Tuple[Any, ...], Any] = {}
+        # same keys -> executable_memory() profile
+        self._memory: Dict[Tuple[Any, ...], Dict[str, int]] = {}
+        self.lowerings: List[Tuple[Any, ...]] = []
         self.cache_hits = 0
         self.values_refreshes = 0
         # guardrails (older pickled configs predate the field -> "auto")
@@ -349,8 +399,11 @@ class DistSpmm:
         self._ex_dev: Optional[Union[FlatExecPlan, HierExecPlan]] = None
         # B-buffer donation is only always-usable when C has B's exact
         # geometry (square operand) — skip otherwise rather than emit
-        # unusable-donation warnings on every call
-        self._donate = bool(config.donate) and plan.shape[0] == plan.shape[1]
+        # unusable-donation warnings on every call. Sibling-kernel
+        # handles skip it entirely: their executables take three
+        # operands and the alias bookkeeping isn't worth the edge cases.
+        self._donate = (bool(config.donate) and self.kernel == "spmm"
+                        and plan.shape[0] == plan.shape[1])
 
     # ----- execution ---------------------------------------------------
 
@@ -375,6 +428,24 @@ class DistSpmm:
                              overlap=self.overlap, **self.axis_kwargs)
         return flat_spmm(self.ex, b, self.mesh, backend=backend,
                          overlap=self.overlap, **self.axis_kwargs)
+
+    def _raw_sddmm(self, x: jax.Array, y: jax.Array, backend: str,
+                   edge: Optional[str]):
+        """Traceable SDDMM path (same plan, dataflow reversed)."""
+        if self.hier is not None:
+            return hier_sddmm(self.ex, x, y, self.mesh, backend=backend,
+                              edge=edge, **self.axis_kwargs)
+        return flat_sddmm(self.ex, x, y, self.mesh, backend=backend,
+                          edge=edge, **self.axis_kwargs)
+
+    def _raw_fused(self, x: jax.Array, y: jax.Array, b: jax.Array,
+                   backend: str, edge: Optional[str]) -> jax.Array:
+        """Traceable FusedMM path: SDDMM -> SpMM in one comm phase."""
+        if self.hier is not None:
+            return hier_fused(self.ex, x, y, b, self.mesh, backend=backend,
+                              edge=edge, **self.axis_kwargs)
+        return flat_fused(self.ex, x, y, b, self.mesh, backend=backend,
+                          edge=edge, **self.axis_kwargs)
 
     def _device_ex(self) -> Union[FlatExecPlan, HierExecPlan]:
         """The exec-plan pytree committed onto the mesh (lazy, cached)."""
@@ -402,6 +473,10 @@ class DistSpmm:
                                    jnp.dtype(dtype),
                                    sharding=self._in_sharding)
         compiled = fn.lower(self._device_ex(), sds).compile()
+        return self._remember(key, compiled)
+
+    def _remember(self, key: Tuple[Any, ...], compiled) -> Any:
+        """Cache a fresh executable + fire the lowering hooks."""
         self._executables[key] = compiled
         self._memory[key] = executable_memory(compiled)
         self.lowerings.append(key)
@@ -409,16 +484,117 @@ class DistSpmm:
             hook(self, key)
         return compiled
 
-    def __call__(self, b, backend: Optional[BackendSpec] = None) -> jax.Array:
-        """``C = A @ b`` — cached executable, or traced inline under jit.
+    def _sddmm_executable(self, n_feat: int, dtype_x, dtype_y, backend: str,
+                          edge: Optional[str]):
+        key = ("sddmm", int(n_feat), jnp.dtype(dtype_x).name,
+               jnp.dtype(dtype_y).name, backend, edge)
+        compiled = self._executables.get(key)
+        if compiled is not None:
+            self.cache_hits += 1
+            return compiled
+        if self.hier is not None:
+            def call(ex, x, y):
+                return hier_sddmm(ex, x, y, self.mesh, backend=backend,
+                                  edge=edge, **self.axis_kwargs)
+        else:
+            def call(ex, x, y):
+                return flat_sddmm(ex, x, y, self.mesh, backend=backend,
+                                  edge=edge, **self.axis_kwargs)
+        m, k = self.plan.shape
+        sx = jax.ShapeDtypeStruct((m, int(n_feat)), jnp.dtype(dtype_x),
+                                  sharding=self._in_sharding)
+        sy = jax.ShapeDtypeStruct((k, int(n_feat)), jnp.dtype(dtype_y),
+                                  sharding=self._in_sharding)
+        compiled = jax.jit(call).lower(self._device_ex(), sx, sy).compile()
+        return self._remember(key, compiled)
 
-        Under ``config.check`` the call is guarded at both ends: B's
-        shape/dtype is validated with an actionable error BEFORE any
-        device placement or lowering (tracers included — the checks are
-        static), and the computed C gets a sampled ``isfinite`` sweep
-        that raises ``NumericalFault`` naming the first bad element.
+    def _fused_executable(self, n_feat: int, n_cols: int, dtype_x, dtype_y,
+                          dtype_b, backend: str, edge: Optional[str]):
+        key = ("fused", int(n_feat), int(n_cols), jnp.dtype(dtype_x).name,
+               jnp.dtype(dtype_y).name, jnp.dtype(dtype_b).name, backend,
+               edge)
+        compiled = self._executables.get(key)
+        if compiled is not None:
+            self.cache_hits += 1
+            return compiled
+        if self.hier is not None:
+            def call(ex, x, y, b):
+                return hier_fused(ex, x, y, b, self.mesh, backend=backend,
+                                  edge=edge, **self.axis_kwargs)
+        else:
+            def call(ex, x, y, b):
+                return flat_fused(ex, x, y, b, self.mesh, backend=backend,
+                                  edge=edge, **self.axis_kwargs)
+        m, k = self.plan.shape
+        sx = jax.ShapeDtypeStruct((m, int(n_feat)), jnp.dtype(dtype_x),
+                                  sharding=self._in_sharding)
+        sy = jax.ShapeDtypeStruct((k, int(n_feat)), jnp.dtype(dtype_y),
+                                  sharding=self._in_sharding)
+        sb = jax.ShapeDtypeStruct((k, int(n_cols)), jnp.dtype(dtype_b),
+                                  sharding=self._in_sharding)
+        compiled = jax.jit(call).lower(self._device_ex(), sx, sy,
+                                       sb).compile()
+        return self._remember(key, compiled)
+
+    def _put(self, arr) -> jax.Array:
+        """Commit one row-sharded dense operand onto the handle's mesh."""
+        if self.topology is not None:
+            return self.topology.put_global(arr, self._in_sharding)
+        return jax.device_put(jnp.asarray(arr), self._in_sharding)
+
+    def _resolve_call(self, kernel, edge) -> Tuple[str, Optional[str]]:
+        """Per-call kernel/edge selection against the config defaults."""
+        kern = self.kernel if kernel is None else kernel
+        if kern not in _KERNELS:
+            raise ValueError(
+                f"kernel must be one of {_KERNELS}; got {kern!r}")
+        if kern == "spmm":
+            if edge is not _UNSET and edge is not None:
+                raise TypeError(
+                    "edge= applies to the sampled values of "
+                    "kernel='sddmm'/'fused'; kernel='spmm' has none")
+            return kern, None
+        edge_name = self.edge if edge is _UNSET else edge
+        if edge_name is not None and edge_name not in EDGE_FNS:
+            raise ValueError(
+                f"edge must be None or one of {tuple(sorted(EDGE_FNS))}; "
+                f"got {edge_name!r}")
+        return kern, edge_name
+
+    def __call__(self, *operands, backend: Optional[BackendSpec] = None,
+                 kernel: Optional[str] = None, edge: Any = _UNSET):
+        """One front door for the whole kernel family, cached per shape.
+
+        Arity follows the (per-call overridable) kernel:
+
+          ``h(b)``               kernel="spmm"  -> C = A @ b
+          ``h(x, y)``            kernel="sddmm" -> values = A ⊙ (x yᵀ)
+          ``h(x, y, b)``         kernel="fused" -> C = edge(A ⊙ (x yᵀ)) @ b
+
+        Concrete arrays hit the AOT executable cache; calls under an
+        outer trace (jit/grad) use the traceable executor path. Under
+        ``config.check`` every dense operand is validated with an
+        actionable error BEFORE device placement or lowering (tracers
+        included — the checks are static), and the output gets a sampled
+        ``isfinite`` sweep that raises ``NumericalFault`` naming the
+        first bad element (or, for SDDMM's value pytree, the bad leaf).
         """
         name = self._backend_name(backend)
+        kern, edge_name = self._resolve_call(kernel, edge)
+        arity = {"spmm": 1, "sddmm": 2, "fused": 3}[kern]
+        operand_names = {"spmm": "(B)", "sddmm": "(X, Y)",
+                         "fused": "(X, Y, B)"}[kern]
+        if len(operands) != arity:
+            raise TypeError(
+                f"kernel={kern!r} takes {arity} operand(s) "
+                f"{operand_names}; got {len(operands)}")
+        if kern == "sddmm":
+            return self._call_sddmm(*operands, name=name, edge=edge_name)
+        if kern == "fused":
+            return self._call_fused(*operands, name=name, edge=edge_name)
+        return self._call_spmm(operands[0], name)
+
+    def _call_spmm(self, b, name: str) -> jax.Array:
         if self._check:
             guards.validate_dense_operand(
                 b, k_expected=self.plan.shape[1],
@@ -426,10 +602,7 @@ class DistSpmm:
         if _is_tracer(b):
             return self._raw_call(b, name)
         b_in = b
-        if self.topology is not None:
-            b = self.topology.put_global(b, self._in_sharding)
-        else:
-            b = jax.device_put(jnp.asarray(b), self._in_sharding)
+        b = self._put(b)
         fn = self._executable(b.shape[1], b.dtype, name)
         if self._donate and b is b_in:
             # the caller handed us an already-placed device array; donating
@@ -451,6 +624,59 @@ class DistSpmm:
                 raise
         return c
 
+    def _call_sddmm(self, x, y, *, name: str, edge: Optional[str]):
+        if self._check:
+            guards.validate_sddmm_operands(
+                x, y, m_expected=self.plan.shape[0],
+                k_expected=self.plan.shape[1],
+                context=f"DistSpmm(P={self.plan.P}) sddmm call")
+        if _is_tracer(x) or _is_tracer(y):
+            return self._raw_sddmm(x, y, name, edge)
+        x, y = self._put(x), self._put(y)
+        fn = self._sddmm_executable(x.shape[1], x.dtype, y.dtype, name, edge)
+        vals = fn(self._device_ex(), x, y)
+        self.calls += 1
+        vals = jax.tree_util.tree_map(
+            lambda v: faults.maybe_poison_array(v, site="output"), vals)
+        if self._check:
+            try:
+                guards.sampled_finite_check_tree(
+                    vals, mode=self._check, call_index=self.calls,
+                    context=f"DistSpmm(P={self.plan.P}) sddmm "
+                            f"backend={name!r}")
+            except guards.NumericalFault:
+                self.numerical_faults += 1
+                raise
+        return vals
+
+    def _call_fused(self, x, y, b, *, name: str,
+                    edge: Optional[str]) -> jax.Array:
+        if self._check:
+            ctx = f"DistSpmm(P={self.plan.P}) fused call"
+            guards.validate_sddmm_operands(
+                x, y, m_expected=self.plan.shape[0],
+                k_expected=self.plan.shape[1], context=ctx)
+            guards.validate_dense_operand(
+                b, k_expected=self.plan.shape[1], context=ctx)
+        if _is_tracer(x) or _is_tracer(y) or _is_tracer(b):
+            return self._raw_fused(x, y, b, name, edge)
+        x, y, b = self._put(x), self._put(y), self._put(b)
+        fn = self._fused_executable(x.shape[1], b.shape[1], x.dtype,
+                                    y.dtype, b.dtype, name, edge)
+        c = fn(self._device_ex(), x, y, b)
+        self.calls += 1
+        c = faults.maybe_poison_array(c, site="output")
+        if self._check:
+            try:
+                guards.sampled_finite_check(
+                    c, mode=self._check, call_index=self.calls,
+                    context=f"DistSpmm(P={self.plan.P}) fused "
+                            f"backend={name!r}")
+            except guards.NumericalFault:
+                self.numerical_faults += 1
+                raise
+        return c
+
     def warm_from(self, other: "DistSpmm") -> int:
         """Pre-lower every executable ``other`` has served.
 
@@ -461,10 +687,24 @@ class DistSpmm:
         executables warmed.
         """
         warmed = 0
-        for (n_cols, dtype_name, backend) in list(other._executables):
-            if backend in self.ex.backends:
+        for key in list(other._executables):
+            if key[0] == "sddmm":
+                _, n_feat, dx, dy, backend, edge = key
+                if backend not in self.ex.backends:
+                    continue
+                self._sddmm_executable(n_feat, dx, dy, backend, edge)
+            elif key[0] == "fused":
+                _, n_feat, n_cols, dx, dy, db, backend, edge = key
+                if backend not in self.ex.backends:
+                    continue
+                self._fused_executable(n_feat, n_cols, dx, dy, db,
+                                       backend, edge)
+            else:
+                n_cols, dtype_name, backend = key
+                if backend not in self.ex.backends:
+                    continue
                 self._executable(n_cols, dtype_name, backend)
-                warmed += 1
+            warmed += 1
         return warmed
 
     def refresh_values(self, *, plan: SpmmPlan, hier: Optional[HierPlan],
@@ -510,10 +750,26 @@ class DistSpmm:
         return True
 
     def lowered_hlo(self, n_cols: Optional[int] = None, dtype=jnp.float32,
-                    backend: Optional[BackendSpec] = None) -> str:
-        """Optimized HLO of the (cached) executable for one call shape."""
+                    backend: Optional[BackendSpec] = None, *,
+                    kernel: Optional[str] = None, n_feat: Optional[int] = None,
+                    edge: Any = _UNSET) -> str:
+        """Optimized HLO of the (cached) executable for one call shape.
+
+        ``kernel=`` selects the family (default: the config's);
+        ``n_feat`` is the F width of the dense X/Y operands for
+        sddmm/fused, ``n_cols`` the B width for spmm/fused — both
+        default to ``config.n_dense_hint``.
+        """
+        kern, edge_name = self._resolve_call(kernel, edge)
         n = int(n_cols if n_cols is not None else self.config.n_dense_hint)
+        f = int(n_feat if n_feat is not None else self.config.n_dense_hint)
         name = self._backend_name(backend)
+        if kern == "sddmm":
+            return self._sddmm_executable(f, dtype, dtype, name,
+                                          edge_name).as_text()
+        if kern == "fused":
+            return self._fused_executable(f, n, dtype, dtype, dtype, name,
+                                          edge_name).as_text()
         return self._executable(n, dtype, name).as_text()
 
     # ----- introspection ----------------------------------------------
@@ -541,6 +797,8 @@ class DistSpmm:
         sched = self.schedule
         out: Dict[str, Any] = dict(self.decisions)
         out.update(
+            kernel=self.kernel,
+            edge=self.edge,
             strategy=self.strategy,
             plan_strategy=plan.strategy,
             P=plan.P,
@@ -589,8 +847,9 @@ class DistSpmm:
         return (f"DistSpmm({self.plan.shape[0]}x{self.plan.shape[1]}, "
                 f"P={self.plan.P}, {tier}, schedule={sched.kind}"
                 f"{f'/K={sched.K}' if sched.kind == 'bucketed' else ''}"
-                f"{', overlapped' if self.overlap else ''}, "
-                f"backends={self.backends})")
+                f"{', overlapped' if self.overlap else ''}"
+                f"{f', kernel={self.kernel}' if self.kernel != 'spmm' else ''}"
+                f", backends={self.backends})")
 
     # ----- serialization ----------------------------------------------
 
@@ -767,9 +1026,11 @@ def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
     derivation, intrinsic hier grouping), never device placement.
     """
     net, n_hint = config.resolve_net(topo), config.n_dense_hint
+    kernel = getattr(config, "kernel", "spmm")
 
     plan = build_plan(a, P, config.strategy, pad_to=config.pad_to)
     decisions: Dict[str, Any] = {
+        "kernel": kernel,
         "net": net.name,
         "net_source": "topology" if config.net == "auto" else "config",
         "n_dense_hint": n_hint,
@@ -801,12 +1062,20 @@ def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
     # The "auto" schedule sweep co-optimizes K with the execution mode
     # (overlap hides padded bytes behind segment compute, shifting which
     # K wins); explicit schedules still get the mode decision below.
+    # Sibling kernels score differently: "fused" moves [Y|B] jointly
+    # (width F+N) plus the reversed X rounds, so its own α-β functions
+    # pick K; "sddmm" moves the same rows as spmm at width F and always
+    # executes staged, so the overlap-free sweep applies. n_dense_hint
+    # stands in for both F and N.
     if hier is not None:
         if config.schedule == "single":
             schedule = single_round_hier_schedule(hier)
         elif isinstance(config.schedule, int):
             schedule = build_hier_comm_schedule(hier, K=config.schedule)
-        elif config.overlap is False:
+        elif kernel == "fused":
+            schedule, _ = choose_hier_fused_schedule(hier, n_hint, n_hint,
+                                                     net, k_max=config.k_max)
+        elif kernel == "sddmm" or config.overlap is False:
             schedule, _ = choose_hier_schedule(hier, n_hint, net,
                                                k_max=config.k_max)
         else:
@@ -818,7 +1087,10 @@ def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
             schedule = single_round_schedule(plan)
         elif isinstance(config.schedule, int):
             schedule = build_comm_schedule(plan, K=config.schedule)
-        elif config.overlap is False:
+        elif kernel == "fused":
+            schedule, _ = choose_fused_schedule(plan, n_hint, n_hint, net,
+                                                k_max=config.k_max)
+        elif kernel == "sddmm" or config.overlap is False:
             schedule, _ = choose_schedule(plan, n_hint, net,
                                           k_max=config.k_max)
         else:
@@ -828,8 +1100,14 @@ def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
 
     fields = _schedule_fields(plan, hier, schedule, n_hint, net)
     decisions.update(fields)
+    if kernel == "fused":
+        decisions["modeled_time_fused"] = (
+            modeled_time_hier_fused_schedule(schedule, n_hint, n_hint, net)
+            if hier is not None
+            else modeled_time_fused_schedule(plan, schedule, n_hint,
+                                             n_hint, net))
     use_overlap = False
-    if schedule.kind == "bucketed":
+    if schedule.kind == "bucketed" and kernel == "spmm":
         if config.overlap is True:
             use_overlap = True
         elif config.overlap == "auto":
@@ -842,10 +1120,11 @@ def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
     # Only when measurement is enabled AND the plan targets THIS
     # substrate: a ladder rung with P != topo.P has no devices to time
     # on, and multi-controller fleets can't profile from one process.
+    # The profiler drives spmm calls, so sibling kernels stay model-only.
     from . import autotune as _autotune
 
-    if (_autotune.measurement_enabled(config) and topo.P == P
-            and not topo.is_multiprocess):
+    if (kernel == "spmm" and _autotune.measurement_enabled(config)
+            and topo.P == P and not topo.is_multiprocess):
         plan, hier, schedule, decisions = _autotune.measured_decide(
             a, P, config, topo, plan=plan, hier=hier,
             hier_cand=hier_cand, schedule=schedule, decisions=decisions)
@@ -883,6 +1162,29 @@ def compile_spmm(a: CSRMatrix, where: Union[Topology, Mesh, int, None] = None,
     from .session import SpmmSession
 
     return SpmmSession.build(a, where, config, **overrides).handle()
+
+
+def compile_sddmm(a: CSRMatrix,
+                  where: Union[Topology, Mesh, int, None] = None,
+                  config: Optional[SpmmConfig] = None,
+                  **overrides) -> DistSpmm:
+    """``compile_spmm`` with ``kernel="sddmm"``: the handle's calls take
+    the two dense operands and return A-patterned sampled values,
+    ``h(x, y) = A ⊙ (x yᵀ)``, through the same autotuned plan."""
+    overrides.setdefault("kernel", "sddmm")
+    return compile_spmm(a, where, config, **overrides)
+
+
+def compile_fused(a: CSRMatrix,
+                  where: Union[Topology, Mesh, int, None] = None,
+                  config: Optional[SpmmConfig] = None,
+                  **overrides) -> DistSpmm:
+    """``compile_spmm`` with ``kernel="fused"``: FusedMM handles —
+    ``h(x, y, b) = edge(A ⊙ (x yᵀ)) @ b`` with the SDDMM and SpMM
+    phases chained through ONE set of collectives (the B/Y gather rides
+    the same rounds, width F+N)."""
+    overrides.setdefault("kernel", "fused")
+    return compile_spmm(a, where, config, **overrides)
 
 
 # ---------------------------------------------------------------------------

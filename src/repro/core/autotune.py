@@ -206,6 +206,8 @@ def _config_signature(config) -> Dict[str, Any]:
     net = config.net
     return {
         "strategy": config.strategy,
+        "kernel": getattr(config, "kernel", "spmm"),
+        "edge": getattr(config, "edge", None),
         "hier": list(config.hier) if isinstance(config.hier, tuple)
                 else config.hier,
         "backends": list(config.backend_names()),

@@ -41,6 +41,10 @@ __all__ = [
     "modeled_time_hier_staged",
     "modeled_time_hier_overlap",
     "choose_hier_schedule",
+    "modeled_time_fused_schedule",
+    "modeled_time_hier_fused_schedule",
+    "choose_fused_schedule",
+    "choose_hier_fused_schedule",
     "balance_stats",
 ]
 
@@ -465,6 +469,129 @@ def modeled_time_hier_overlap(
     return local / flop_rate + sum(
         max(comm, f / flop_rate)
         for comm, f in zip(_round_comm_times(sched, unit, bw, lat), flops))
+
+
+# ---------------------------------------------------------------------------
+# FusedMM (SDDMM → SpMM in one communication phase) scoring
+# ---------------------------------------------------------------------------
+#
+# The fused executor's bytes per schedule are fixed by the SAME row
+# counts as SpMM: the joint [Y | B] gather moves every B-phase row at
+# width F+N, and the C-phase rows are crossed twice — X dest→source at
+# width F, aggregated partials source→dest at width N — F+N per row
+# again. So fused and the unfused SDDMM→SpMM composition move IDENTICAL
+# bytes; what fusion buys is α: per bucketed round the unfused pair pays
+# (b>0)+(c>0) latencies TWICE (once per phase-separated kernel launch),
+# the fused round pays (b>0) + 2·(c>0) — one B-phase α saved per round
+# with B traffic, and one α total in the single-round case (3 a2a vs
+# 2+2). SDDMM alone needs no new scorer: its rows match SpMM's with both
+# parts at width F, i.e. ``modeled_time_schedule(plan, sched, F, net)``.
+
+
+def _fused_alpha_beta_time(sched: CommSchedule, unit: float, bw: float,
+                           lat: float) -> float:
+    """α-β time of one FUSED schedule realization on a fixed tier.
+
+    ``unit`` is the per-row byte width (F+N)·sz — joint gather rows and
+    the X+C row pair both carry it (see the module comment above).
+    """
+    if sched.kind == "single":
+        return 3 * lat + sched.rows_per_process() * unit / bw
+    out = 0.0
+    for rnd in sched.rounds:
+        rows_b = sum(sched.slots_b[d - 1] for d in rnd.shifts)
+        rows_c = sum(sched.slots_c[d - 1] for d in rnd.shifts)
+        phases = (1 if rows_b else 0) + (2 if rows_c else 0)
+        out += phases * lat + (rows_b + rows_c) * unit / bw
+    return out
+
+
+def modeled_time_fused_schedule(
+    plan: SpmmPlan,
+    sched: CommSchedule,
+    n_feat: int,
+    n_dense: int,
+    net: NetworkSpec,
+    sz_dt: int = 4,
+) -> float:
+    """α-β time of one flat FusedMM schedule realization.
+
+    ``n_feat`` is the sampled feature width F (X/Y columns), ``n_dense``
+    the SpMM operand width N; every scheduled row crosses the wire once
+    at width F+N.
+    """
+    bw, lat = _tier(net, plan.P)
+    return _fused_alpha_beta_time(sched, (n_feat + n_dense) * sz_dt, bw, lat)
+
+
+def modeled_time_hier_fused_schedule(
+    sched: CommSchedule,
+    n_feat: int,
+    n_dense: int,
+    net: NetworkSpec,
+    sz_dt: int = 4,
+) -> float:
+    """α-β time of a hier INTER-GROUP FusedMM schedule realization (the
+    inter-group collectives are tier-fixed, as in
+    ``modeled_time_hier_schedule``)."""
+    return _fused_alpha_beta_time(sched, (n_feat + n_dense) * sz_dt,
+                                  net.bw_inter, net.lat_inter)
+
+
+def choose_fused_schedule(
+    plan: SpmmPlan,
+    n_feat: int,
+    n_dense: int,
+    net: NetworkSpec,
+    k_max: int = 4,
+    sz_dt: int = 4,
+) -> Tuple[CommSchedule, float]:
+    """Pick the fastest schedule for the fused kernel (comm-only — the
+    fused executors are staged by construction, no overlap axis)."""
+    single = single_round_schedule(plan)
+    best = (single,
+            modeled_time_fused_schedule(plan, single, n_feat, n_dense, net,
+                                        sz_dt))
+    seen = set()
+    for K in range(1, max(1, k_max) + 1):
+        sched = build_comm_schedule(plan, K=K)
+        key = (sched.slots_b, sched.slots_c)
+        if key in seen:
+            continue
+        seen.add(key)
+        t = modeled_time_fused_schedule(plan, sched, n_feat, n_dense, net,
+                                        sz_dt)
+        if t < best[1]:
+            best = (sched, t)
+    return best
+
+
+def choose_hier_fused_schedule(
+    hier: HierPlan,
+    n_feat: int,
+    n_dense: int,
+    net: NetworkSpec,
+    k_max: int = 4,
+    sz_dt: int = 4,
+) -> Tuple[CommSchedule, float]:
+    """``choose_fused_schedule`` one tier up (inter-group candidates)."""
+    single = single_round_hier_schedule(hier)
+    best = (single,
+            modeled_time_hier_fused_schedule(single, n_feat, n_dense, net,
+                                             sz_dt))
+    seen = set()
+    for K in range(1, max(1, k_max) + 1):
+        sched = build_hier_comm_schedule(hier, K=K)
+        key = (sched.slots_b, sched.slots_c,
+               sched.local_slot_b, sched.local_slot_c)
+        if key in seen:
+            continue
+        seen.add(key)
+        t = modeled_time_hier_fused_schedule(sched, n_feat, n_dense, net,
+                                             sz_dt)
+        if t < best[1]:
+            best = (sched, t)
+    return best
 
 
 def choose_hier_schedule(

@@ -1,0 +1,596 @@
+"""Distributed SDDMM + FusedMM over the SHIRO SpMM plans (sibling family).
+
+SDDMM — ``vals(i,j) = a(i,j) · (x_i · y_j)`` per stored nonzero — is
+communication-equivalent to SpMM over the same sparsity pattern
+(Bharadwaj, Buluç & Demmel): the nonzeros that force process p to FETCH
+row j of B for SpMM are exactly the ones that make it need row j of Y
+for SDDMM, and the nonzeros whose partial C rows p SHIPS to q are the
+ones whose sampled values live at q's X rows. This module therefore
+reuses the SAME exec plans (``FlatExecPlan`` / ``HierExecPlan``), comm
+schedules, and piece layouts as ``dist_spmm`` with the dataflow
+reversed:
+
+* column-covered nonzeros (colp): Y rows travel dest-ward over the
+  UNCHANGED B-gather rounds (same ``b_send_idx``, same shifts — Y and B
+  share the local-K row space).
+* row-covered nonzeros (rowp): the SpMM phase consumes their values at
+  the SOURCE (where the partial C rows are computed), so X rows travel
+  dest → source over the C-transfer segment layout with every
+  ppermute shift REVERSED (d → P−d). The received segments line up with
+  the rowp row space at the same offsets, because the per-shift slot
+  maps are schedule-global.
+* diagonal nonzeros sample local X against local Y — no wire.
+
+``flat_sddmm`` / ``hier_sddmm`` return the sampled values in the
+backend's native piece layout ({"diag", "colp", "rowp"}); feed them to
+``flat_spmm_values`` / ``hier_spmm_values`` (an SpMM whose stored values
+are swapped) for the unfused two-phase composition.
+
+``fused_sddmm_spmm`` (FusedMM) chains both phases through ONE set of
+collectives: the B gather carries ``concat([Y, B], axis=1)`` so the
+SDDMM operand rides the same permutes as the SpMM operand (one latency
+per round instead of two), the sampled values drop into the SpMM kernels
+via ``with_values`` without leaving the device, and the C transfer runs
+unchanged. On a bucketed schedule the fused handle's collective-permute
+SET equals the plain SpMM handle's whenever the demanded C shifts are
+closed under reversal (always true for the all-shifts-demanded patterns
+attention workloads produce) — no second gather round exists to add new
+pairs.
+
+Edge nonlinearities (the ``edge=`` axis, e.g. graph-attention's
+leaky_relu) apply to the sampled values between the phases. They MUST be
+zero-preserving (``f(0) = 0``): padding slots carry stored value 0,
+sample to 0, and stay silent only if the nonlinearity keeps them there.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..compat import all_to_all, psum_scatter, shard_map
+from ..kernels.ops import pack_rows_op, scatter_add_rows_exec_op
+from .dist_spmm import (
+    BackendSpec, FlatExecPlan, HierExecPlan, Segments, _exchange_segments,
+    _slice_fetch, flat_spmm, hier_spmm,
+)
+from .local_backend import backend_sddmm, backend_with_values
+
+__all__ = [
+    "EDGE_FNS",
+    "resolve_edge",
+    "SddmmValues",
+    "flat_sddmm",
+    "hier_sddmm",
+    "with_values_exec",
+    "flat_spmm_values",
+    "hier_spmm_values",
+    "flat_fused",
+    "hier_fused",
+    "fused_sddmm_spmm",
+]
+
+# sampled values per piece, backend-native layout, leading [P, ...] (flat)
+# or [G, L, ...] (hier) axes — the pytree SpMM-with-swapped-values takes
+SddmmValues = Dict[str, jax.Array]
+
+EdgeSpec = Union[None, str, Callable[[jax.Array], jax.Array]]
+
+# Named edge nonlinearities for the sampled values. Every entry MUST be
+# zero-preserving (f(0) == 0) so padding slots stay silent — that is the
+# whole registry contract, not a stylistic preference.
+EDGE_FNS: Dict[str, Callable[[jax.Array], jax.Array]] = {
+    "leaky_relu": functools.partial(jax.nn.leaky_relu, negative_slope=0.2),
+    "relu": jax.nn.relu,
+}
+
+
+def resolve_edge(edge: EdgeSpec) -> Optional[Callable]:
+    """None → identity (as None); name → registry lookup; callable → itself."""
+    if edge is None or callable(edge):
+        return edge if edge is not None else None
+    try:
+        return EDGE_FNS[edge]
+    except KeyError:
+        raise ValueError(
+            f"unknown edge nonlinearity {edge!r}; named options: "
+            f"{tuple(EDGE_FNS)} (or pass any zero-preserving callable)"
+        ) from None
+
+
+def _apply_edge(vals: SddmmValues, fn: Optional[Callable]) -> SddmmValues:
+    return {k: fn(v) for k, v in vals.items()} if fn is not None else vals
+
+
+def _reverse_segments(segments: Segments, P_: int) -> Segments:
+    """The C-transfer segments with every ppermute shift inverted —
+    offsets and slots unchanged, so send and receive keep one layout."""
+    return tuple(((P_ - d) % P_, off, slot) for d, off, slot in segments)
+
+
+# ---------------------------------------------------------------------------
+# per-device exchange helpers (called INSIDE shard_map bodies)
+# ---------------------------------------------------------------------------
+
+
+def _flat_gather_single(rows_loc, b_send_idx, axis, P_, max_b):
+    """Dense rows → the flat [P·max_b, W] column-gather space (one a2a)."""
+    send = pack_rows_op(rows_loc, b_send_idx)  # [P, max_b, W]
+    recv = all_to_all(send, axis, 0, 0, tiled=False)
+    return recv.reshape(P_ * max_b, rows_loc.shape[1])
+
+
+def _flat_gather_bucketed(rows_loc, b_send_idx, segments, axis, P_, R_b):
+    """Dense rows → the bucketed [R_b, W] receive space (one ppermute
+    per scheduled B shift)."""
+    send = pack_rows_op(rows_loc, b_send_idx)  # [R_b, W]
+    return _exchange_segments(segments, axis, P_, R_b, rows_loc.shape[1],
+                              rows_loc.dtype, _slice_fetch(send))
+
+
+def _flat_x_single(x_loc, c_recv_rows, axis, P_, max_c):
+    """X rows dest → source over the single-round C layout.
+
+    Each dest packs its X rows by ``c_recv_rows`` [P(src), max_c]; the
+    all_to_all is self-inverse in this layout, so source q receives
+    exactly its rowp row space [P(dst)·max_c, F] — slot j of tile p holds
+    the X row the partial C row q computes for p at slot j lands on.
+    """
+    xs = pack_rows_op(x_loc, c_recv_rows)  # [P, max_c, F]
+    recv = all_to_all(xs, axis, 0, 0, tiled=False)
+    return recv.reshape(P_ * max_c, x_loc.shape[1])
+
+
+def _flat_x_bucketed(x_loc, c_recv_rows, c_segments, axis, P_, R_c):
+    """X rows dest → source over the bucketed C layout, shifts reversed.
+
+    The per-shift slot maps are schedule-global, so the segment arriving
+    under reversed shift P−d sits at the SAME (offset, slot) its rowp
+    rows occupy in the send space — no relayout on arrival.
+    """
+    xs = pack_rows_op(x_loc, c_recv_rows)  # [R_c, F]
+    return _exchange_segments(_reverse_segments(c_segments, P_), axis, P_,
+                              R_c, x_loc.shape[1], x_loc.dtype,
+                              _slice_fetch(xs))
+
+
+def _hier_gather_single(rows_loc, b_group_send_idx, group_axis, local_axis,
+                        G, L, max_bg):
+    """Dense rows → the hier [L·G·max_bg, W] gathered space (inter-group
+    a2a, then intra-group all_gather) — same as Stage I/II of hier_spmm."""
+    send = pack_rows_op(rows_loc, b_group_send_idx)  # [G, max_bg, W]
+    recv = all_to_all(send, group_axis, 0, 0, tiled=False)
+    allg = jax.lax.all_gather(recv, local_axis, axis=0, tiled=False)
+    return allg.reshape(L * G * max_bg, rows_loc.shape[1])
+
+
+def _hier_gather_bucketed(rows_loc, b_send_flat, bg_segments, local_b,
+                          bg_all, group_axis, local_axis, G, L, R_bg):
+    """Dense rows → the SEGMENT-major hier gathered space [L·R_bg, W]."""
+    w = rows_loc.shape[1]
+    send = pack_rows_op(rows_loc, b_send_flat)  # [R_bg, W]
+    recv = _exchange_segments(bg_segments, group_axis, G, R_bg, w,
+                              rows_loc.dtype, _slice_fetch(send),
+                              local=local_b)
+    allg = jax.lax.all_gather(recv, local_axis, axis=0, tiled=False)
+    gparts = [allg[:, off:off + slot, :].reshape(L * slot, w)
+              for _, off, slot in bg_all]
+    return (jnp.concatenate(gparts, axis=0) if gparts
+            else jnp.zeros((L * R_bg, w), rows_loc.dtype))
+
+
+def _hier_x_single(x_loc, c_recv_rows, group_axis, local_axis, G, L,
+                   max_cg):
+    """X rows dest → source over the single-round hier C layout.
+
+    Dest (gd, l) packs by ``c_recv_rows`` [G(src), max_cg]; the group
+    a2a hands source (gs, l) the X rows of every dest group at ITS local
+    rank, and the intra-group all_gather fills in the other local ranks.
+    Transposing to (dst-group, local, slot) order reproduces the rowp
+    row space (gd·L + ld)·max_cg + slot exactly.
+    """
+    f = x_loc.shape[1]
+    xs = pack_rows_op(x_loc, c_recv_rows)  # [G, max_cg, F]
+    recv = all_to_all(xs, group_axis, 0, 0, tiled=False)  # [G(dst), max_cg, F]
+    allx = jax.lax.all_gather(recv, local_axis, axis=0,
+                              tiled=False)  # [L, G, max_cg, F]
+    return allx.transpose(1, 0, 2, 3).reshape(G * L * max_cg, f)
+
+
+def _hier_x_bucketed(x_loc, c_recv_flat, cg_segments, local_c, group_axis,
+                     local_axis, G, L, max_cg, R_cg):
+    """X rows dest → source over the bucketed hier C layout.
+
+    Reversed group permutes land each dest group's X pack at its source
+    group (shift 0 is the wire-free own-group slice); the intra-group
+    all_gather recovers every destination local rank. The rowp row space
+    is SHIFT-major, (dg·L + ld)·max_cg + slot, with every shift padded to
+    max_cg — so each received segment is re-padded slot → max_cg and laid
+    out in ascending-shift order, zeros for unscheduled shifts (their
+    rowp rows store no nonzeros, so zero X rows sample nothing).
+    """
+    f = x_loc.shape[1]
+    xs = pack_rows_op(x_loc, c_recv_flat)  # [R_cg, F]
+    recv = _exchange_segments(_reverse_segments(cg_segments, G), group_axis,
+                              G, R_cg, f, x_loc.dtype, _slice_fetch(xs),
+                              local=local_c)
+    allx = jax.lax.all_gather(recv, local_axis, axis=0,
+                              tiled=False)  # [L, R_cg, F]
+    off_map = dict({0: local_c} if local_c is not None else {})
+    off_map.update({d: (off, slot) for d, off, slot in cg_segments})
+    parts = []
+    for dg in range(G):
+        if dg in off_map:
+            off, slot = off_map[dg]
+            seg = allx[:, off:off + slot, :]
+            seg = jnp.pad(seg, ((0, 0), (0, max_cg - slot), (0, 0)))
+        else:
+            seg = jnp.zeros((L, max_cg, f), x_loc.dtype)
+        parts.append(seg.reshape(L * max_cg, f))
+    return jnp.concatenate(parts, axis=0)  # [G·L·max_cg, F]
+
+
+def _sample(be, pieces, x_loc, y_loc, x_rows, y_gathered, fn_edge):
+    """The three per-piece SDDMM computes all executors share."""
+    vals = {
+        "diag": backend_sddmm(be, pieces["diag"], x_loc, y_loc),
+        "colp": backend_sddmm(be, pieces["colp"], x_loc, y_gathered),
+        "rowp": backend_sddmm(be, pieces["rowp"], x_rows, y_loc),
+    }
+    return _apply_edge(vals, fn_edge)
+
+
+# ---------------------------------------------------------------------------
+# SDDMM executors
+# ---------------------------------------------------------------------------
+
+
+def flat_sddmm(plan: FlatExecPlan, x: jax.Array, y: jax.Array, mesh: Mesh,
+               axis: str = "x", backend: Optional[BackendSpec] = None,
+               edge: EdgeSpec = None) -> SddmmValues:
+    """Sampled values ``a ⊙ (X · Yᵀ)`` with the flat SHIRO schedule.
+
+    ``x``: [M, F] row-sharded like C; ``y``: [K, F] row-sharded like B.
+    Returns the values in the backend's native piece layout, leading
+    axis P — feed ``flat_spmm_values`` for the unfused composition.
+    """
+    P_ = plan.P
+    be, pieces = plan.resolve_backend(backend)
+    fn_edge = resolve_edge(edge)
+    sched = plan.schedule
+
+    if sched.kind == "single":
+        max_b, max_c = plan.max_b, plan.max_c
+
+        def body(pieces, b_send_idx, c_recv_rows, x_loc, y_loc):
+            pieces = jax.tree_util.tree_map(lambda v: v[0], pieces)
+            b_send_idx = b_send_idx[0]
+            c_recv_rows = c_recv_rows[0]
+            y_g = _flat_gather_single(y_loc, b_send_idx, axis, P_, max_b)
+            x_r = _flat_x_single(x_loc, c_recv_rows, axis, P_, max_c)
+            vals = _sample(be, pieces, x_loc, y_loc, x_r, y_g, fn_edge)
+            return jax.tree_util.tree_map(lambda v: v[None], vals)
+    else:
+        b_segments: Segments = plan.meta["b_segments"]
+        c_segments: Segments = plan.meta["c_segments"]
+        R_b, R_c = plan.meta["R_b"], plan.meta["R_c"]
+
+        def body(pieces, b_send_idx, c_recv_rows, x_loc, y_loc):
+            pieces = jax.tree_util.tree_map(lambda v: v[0], pieces)
+            b_send_idx = b_send_idx[0]
+            c_recv_rows = c_recv_rows[0]
+            y_g = _flat_gather_bucketed(y_loc, b_send_idx, b_segments,
+                                        axis, P_, R_b)
+            x_r = _flat_x_bucketed(x_loc, c_recv_rows, c_segments, axis,
+                                   P_, R_c)
+            vals = _sample(be, pieces, x_loc, y_loc, x_r, y_g, fn_edge)
+            return jax.tree_util.tree_map(lambda v: v[None], vals)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis),) * 5,
+                   out_specs=P(axis))
+    return fn(pieces, plan.b_send_idx, plan.c_recv_rows, x, y)
+
+
+def hier_sddmm(plan: HierExecPlan, x: jax.Array, y: jax.Array, mesh: Mesh,
+               group_axis: str = "g", local_axis: str = "l",
+               backend: Optional[BackendSpec] = None,
+               edge: EdgeSpec = None) -> SddmmValues:
+    """Sampled values with the two-tier schedule (leading [G, L] axes)."""
+    G, L = plan.G, plan.L
+    max_bg, max_cg = plan.max_bg, plan.max_cg
+    be, pieces = plan.resolve_backend(backend)
+    fn_edge = resolve_edge(edge)
+    sched = plan.schedule
+
+    if sched.kind == "single":
+        def body(pieces, b_group_send_idx, c_recv_rows, x_loc, y_loc):
+            pieces = jax.tree_util.tree_map(lambda v: v[0, 0], pieces)
+            b_group_send_idx = b_group_send_idx[0, 0]
+            c_recv_rows = c_recv_rows[0, 0]
+            y_g = _hier_gather_single(y_loc, b_group_send_idx, group_axis,
+                                      local_axis, G, L, max_bg)
+            x_r = _hier_x_single(x_loc, c_recv_rows, group_axis,
+                                 local_axis, G, L, max_cg)
+            vals = _sample(be, pieces, x_loc, y_loc, x_r, y_g, fn_edge)
+            return jax.tree_util.tree_map(lambda v: v[None, None], vals)
+    else:
+        bg_segments: Segments = plan.meta["bg_segments"]
+        cg_segments: Segments = plan.meta["cg_segments"]
+        bg_all: Segments = plan.meta["bg_all"]
+        local_b = plan.meta["local_b"]
+        local_c = plan.meta["local_c"]
+        R_bg, R_cg = plan.meta["R_bg"], plan.meta["R_cg"]
+
+        def body(pieces, b_group_send_idx, c_recv_rows, x_loc, y_loc):
+            pieces = jax.tree_util.tree_map(lambda v: v[0, 0], pieces)
+            b_send_flat = b_group_send_idx[0, 0]
+            c_recv_flat = c_recv_rows[0, 0]
+            y_g = _hier_gather_bucketed(y_loc, b_send_flat, bg_segments,
+                                        local_b, bg_all, group_axis,
+                                        local_axis, G, L, R_bg)
+            x_r = _hier_x_bucketed(x_loc, c_recv_flat, cg_segments,
+                                   local_c, group_axis, local_axis, G, L,
+                                   max_cg, R_cg)
+            vals = _sample(be, pieces, x_loc, y_loc, x_r, y_g, fn_edge)
+            return jax.tree_util.tree_map(lambda v: v[None, None], vals)
+
+    gl = P(group_axis, local_axis)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(gl,) * 3 + (P((group_axis, local_axis)),) * 2,
+                   out_specs=gl)
+    return fn(pieces, plan.b_group_send_idx, plan.c_recv_rows, x, y)
+
+
+# ---------------------------------------------------------------------------
+# SpMM over swapped values (the unfused second phase)
+# ---------------------------------------------------------------------------
+
+
+def with_values_exec(plan, values: SddmmValues,
+                     backend: Optional[BackendSpec] = None):
+    """An exec plan whose stored values are replaced by ``values``.
+
+    Works on flat and hier plans alike — ``with_values`` only touches the
+    selected backend's diag/colp/rowp value arrays, so the leading [P] /
+    [G, L] axes ride through untouched. The per-round overlap consumables
+    (``colp@i`` / ``rowp@i``) keep the ORIGINAL values; run the result
+    with ``overlap=False`` (the wrappers below always do).
+    """
+    be, _ = plan.resolve_backend(backend)
+    swapped = dict(plan.pieces[be.name])
+    for name in ("diag", "colp", "rowp"):
+        swapped[name] = backend_with_values(be, swapped[name], values[name])
+    pieces = dict(plan.pieces)
+    pieces[be.name] = swapped
+    return dataclasses.replace(plan, pieces=pieces)
+
+
+def flat_spmm_values(plan: FlatExecPlan, values: SddmmValues,
+                     b: jax.Array, mesh: Mesh, axis: str = "x",
+                     backend: Optional[BackendSpec] = None) -> jax.Array:
+    """``C = (A with values) @ B`` — the unfused SDDMM→SpMM second phase."""
+    return flat_spmm(with_values_exec(plan, values, backend), b, mesh,
+                     axis=axis, backend=backend, overlap=False)
+
+
+def hier_spmm_values(plan: HierExecPlan, values: SddmmValues,
+                     b: jax.Array, mesh: Mesh, group_axis: str = "g",
+                     local_axis: str = "l",
+                     backend: Optional[BackendSpec] = None) -> jax.Array:
+    return hier_spmm(with_values_exec(plan, values, backend), b, mesh,
+                     group_axis=group_axis, local_axis=local_axis,
+                     backend=backend, overlap=False)
+
+
+# ---------------------------------------------------------------------------
+# FusedMM: SDDMM → SpMM through one communication phase
+# ---------------------------------------------------------------------------
+
+
+def _concat_dense(y_loc: jax.Array, b_loc: jax.Array):
+    dt = jnp.promote_types(y_loc.dtype, b_loc.dtype)
+    yb = jnp.concatenate([y_loc.astype(dt), b_loc.astype(dt)], axis=1)
+    return yb, y_loc.shape[1], dt
+
+
+def flat_fused(plan: FlatExecPlan, x: jax.Array, y: jax.Array,
+               b: jax.Array, mesh: Mesh, axis: str = "x",
+               backend: Optional[BackendSpec] = None,
+               edge: EdgeSpec = None) -> jax.Array:
+    """``C = (edge(A ⊙ (X·Yᵀ))) @ B`` in one communication phase.
+
+    The B-gather rounds carry ``[Y | B]`` jointly (width F+N, same
+    permutes as plain SpMM), the sampled values feed the SpMM kernels via
+    ``with_values`` on-device, and the C transfer is unchanged — so the
+    collective-permute set matches the plain SpMM handle on the same
+    (pattern, schedule) whenever the C shifts are closed under reversal.
+    """
+    m_local = plan.meta["m_local"]
+    P_ = plan.P
+    be, pieces = plan.resolve_backend(backend)
+    fn_edge = resolve_edge(edge)
+    sched = plan.schedule
+
+    if sched.kind == "single":
+        max_b, max_c = plan.max_b, plan.max_c
+
+        def body(pieces, b_send_idx, c_recv_rows, agg_perm, agg_meta,
+                 x_loc, y_loc, b_loc):
+            pieces = jax.tree_util.tree_map(lambda v: v[0], pieces)
+            b_send_idx = b_send_idx[0]
+            c_recv_rows = c_recv_rows[0]
+            agg_perm, agg_meta = agg_perm[0], agg_meta[0]
+            n = b_loc.shape[1]
+
+            # ① ONE gather round set for both phases: [Y | B] jointly
+            yb, f, dt = _concat_dense(y_loc, b_loc)
+            recv = _flat_gather_single(yb, b_send_idx, axis, P_, max_b)
+            y_g, b_g = recv[:, :f], recv[:, f:]
+
+            # ② X rows ride the reversed C layout to the rowp sources
+            x_r = _flat_x_single(x_loc, c_recv_rows, axis, P_, max_c)
+
+            # ③ sample, then swap the values into the SpMM pieces
+            vals = _sample(be, pieces, x_loc, y_loc, x_r, y_g, fn_edge)
+            pc = {k: backend_with_values(be, pieces[k], vals[k])
+                  for k in ("diag", "colp", "rowp")}
+
+            # ④ the SpMM phase, verbatim from the staged executor
+            partials = be.compute(pc["rowp"], b_loc.astype(dt),
+                                  P_ * max_c)
+            recv_c = all_to_all(partials.reshape(P_, max_c, n), axis, 0,
+                                0, tiled=False)
+            c = be.compute(pc["diag"], b_loc.astype(dt), m_local)
+            c = c + be.compute(pc["colp"], b_g, m_local)
+            return scatter_add_rows_exec_op(
+                c, recv_c.reshape(P_ * max_c, n),
+                c_recv_rows.reshape(-1), agg_perm, agg_meta)
+    else:
+        b_segments: Segments = plan.meta["b_segments"]
+        c_segments: Segments = plan.meta["c_segments"]
+        R_b, R_c = plan.meta["R_b"], plan.meta["R_c"]
+
+        def body(pieces, b_send_idx, c_recv_rows, agg_perm, agg_meta,
+                 x_loc, y_loc, b_loc):
+            pieces = jax.tree_util.tree_map(lambda v: v[0], pieces)
+            b_send_idx = b_send_idx[0]
+            c_recv_rows = c_recv_rows[0]
+            agg_perm, agg_meta = agg_perm[0], agg_meta[0]
+            n = b_loc.shape[1]
+
+            yb, f, dt = _concat_dense(y_loc, b_loc)
+            recv = _flat_gather_bucketed(yb, b_send_idx, b_segments, axis,
+                                         P_, R_b)
+            y_g, b_g = recv[:, :f], recv[:, f:]
+            x_r = _flat_x_bucketed(x_loc, c_recv_rows, c_segments, axis,
+                                   P_, R_c)
+            vals = _sample(be, pieces, x_loc, y_loc, x_r, y_g, fn_edge)
+            pc = {k: backend_with_values(be, pieces[k], vals[k])
+                  for k in ("diag", "colp", "rowp")}
+
+            partials = be.compute(pc["rowp"], b_loc.astype(dt), R_c)
+            recv_c = _exchange_segments(c_segments, axis, P_, R_c, n, dt,
+                                        _slice_fetch(partials))
+            c = be.compute(pc["diag"], b_loc.astype(dt), m_local)
+            c = c + be.compute(pc["colp"], b_g, m_local)
+            return scatter_add_rows_exec_op(
+                c, recv_c, c_recv_rows, agg_perm, agg_meta)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis),) * 8,
+                   out_specs=P(axis))
+    return fn(pieces, plan.b_send_idx, plan.c_recv_rows, plan.agg_perm,
+              plan.agg_meta, x, y, b)
+
+
+def hier_fused(plan: HierExecPlan, x: jax.Array, y: jax.Array,
+               b: jax.Array, mesh: Mesh, group_axis: str = "g",
+               local_axis: str = "l",
+               backend: Optional[BackendSpec] = None,
+               edge: EdgeSpec = None) -> jax.Array:
+    """FusedMM on the two-tier schedule — joint [Y | B] inter-group fetch,
+    reversed inter-group X rounds, unchanged C transfer."""
+    m_local = plan.meta["m_local"]
+    G, L = plan.G, plan.L
+    max_bg, max_cg = plan.max_bg, plan.max_cg
+    be, pieces = plan.resolve_backend(backend)
+    fn_edge = resolve_edge(edge)
+    sched = plan.schedule
+
+    if sched.kind == "single":
+        def body(pieces, b_group_send_idx, c_recv_rows, agg_perm, agg_meta,
+                 x_loc, y_loc, b_loc):
+            pieces = jax.tree_util.tree_map(lambda v: v[0, 0], pieces)
+            b_group_send_idx = b_group_send_idx[0, 0]
+            c_recv_rows = c_recv_rows[0, 0]
+            agg_perm, agg_meta = agg_perm[0, 0], agg_meta[0, 0]
+            n = b_loc.shape[1]
+
+            yb, f, dt = _concat_dense(y_loc, b_loc)
+            recv = _hier_gather_single(yb, b_group_send_idx, group_axis,
+                                       local_axis, G, L, max_bg)
+            y_g, b_g = recv[:, :f], recv[:, f:]
+            x_r = _hier_x_single(x_loc, c_recv_rows, group_axis,
+                                 local_axis, G, L, max_cg)
+            vals = _sample(be, pieces, x_loc, y_loc, x_r, y_g, fn_edge)
+            pc = {k: backend_with_values(be, pieces[k], vals[k])
+                  for k in ("diag", "colp", "rowp")}
+
+            partials = be.compute(pc["rowp"], b_loc.astype(dt),
+                                  G * L * max_cg)
+            partials = partials.reshape(G, L * max_cg, n)
+            agg = psum_scatter(partials, local_axis,
+                               scatter_dimension=1, tiled=True)
+            recv_cg = all_to_all(agg, group_axis, 0, 0, tiled=False)
+
+            c = be.compute(pc["diag"], b_loc.astype(dt), m_local)
+            c = c + be.compute(pc["colp"], b_g, m_local)
+            c = scatter_add_rows_exec_op(
+                c, recv_cg.reshape(G * max_cg, n),
+                c_recv_rows.reshape(-1), agg_perm, agg_meta)
+            return c[None]
+    else:
+        bg_segments: Segments = plan.meta["bg_segments"]
+        cg_segments: Segments = plan.meta["cg_segments"]
+        bg_all: Segments = plan.meta["bg_all"]
+        local_b = plan.meta["local_b"]
+        local_c = plan.meta["local_c"]
+        R_bg, R_cg = plan.meta["R_bg"], plan.meta["R_cg"]
+
+        def body(pieces, b_group_send_idx, c_recv_rows, agg_perm, agg_meta,
+                 x_loc, y_loc, b_loc):
+            pieces = jax.tree_util.tree_map(lambda v: v[0, 0], pieces)
+            b_send_flat = b_group_send_idx[0, 0]
+            c_recv_flat = c_recv_rows[0, 0]
+            agg_perm, agg_meta = agg_perm[0, 0], agg_meta[0, 0]
+            n = b_loc.shape[1]
+
+            yb, f, dt = _concat_dense(y_loc, b_loc)
+            recv = _hier_gather_bucketed(yb, b_send_flat, bg_segments,
+                                         local_b, bg_all, group_axis,
+                                         local_axis, G, L, R_bg)
+            y_g, b_g = recv[:, :f], recv[:, f:]
+            x_r = _hier_x_bucketed(x_loc, c_recv_flat, cg_segments,
+                                   local_c, group_axis, local_axis, G, L,
+                                   max_cg, R_cg)
+            vals = _sample(be, pieces, x_loc, y_loc, x_r, y_g, fn_edge)
+            pc = {k: backend_with_values(be, pieces[k], vals[k])
+                  for k in ("diag", "colp", "rowp")}
+
+            partials = be.compute(pc["rowp"], b_loc.astype(dt),
+                                  G * L * max_cg)
+            partials = partials.reshape(G, L * max_cg, n)
+            agg = psum_scatter(partials, local_axis,
+                               scatter_dimension=1, tiled=True)
+            recv_cg = _exchange_segments(
+                cg_segments, group_axis, G, R_cg, n, dt,
+                lambda dg, off, slot: jax.lax.slice_in_dim(agg[dg], 0, slot),
+                local=local_c)
+
+            c = be.compute(pc["diag"], b_loc.astype(dt), m_local)
+            c = c + be.compute(pc["colp"], b_g, m_local)
+            c = scatter_add_rows_exec_op(
+                c, recv_cg, c_recv_flat, agg_perm, agg_meta)
+            return c[None]
+
+    gl = P(group_axis, local_axis)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(gl,) * 5 + (P((group_axis, local_axis)),) * 3,
+                   out_specs=gl)
+    out = fn(pieces, plan.b_group_send_idx, plan.c_recv_rows,
+             plan.agg_perm, plan.agg_meta, x, y, b)
+    return out.reshape(-1, b.shape[1])
+
+
+def fused_sddmm_spmm(plan, x: jax.Array, y: jax.Array, b: jax.Array,
+                     mesh: Mesh, backend: Optional[BackendSpec] = None,
+                     edge: EdgeSpec = None, **axis_kwargs) -> jax.Array:
+    """Dispatch FusedMM on the plan's tier (flat vs hierarchical)."""
+    if isinstance(plan, HierExecPlan):
+        return hier_fused(plan, x, y, b, mesh, backend=backend, edge=edge,
+                          **axis_kwargs)
+    return flat_fused(plan, x, y, b, mesh, backend=backend, edge=edge,
+                      **axis_kwargs)

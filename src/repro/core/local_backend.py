@@ -53,6 +53,9 @@ __all__ = [
     "available_backends",
     "backend_prepare_segments",
     "backend_compute_segment",
+    "backend_sddmm",
+    "backend_with_values",
+    "coo_sddmm_local",
 ]
 
 Piece = Dict[str, jax.Array]
@@ -65,7 +68,10 @@ class LocalSpmmBackend(Protocol):
     Beyond ``prepare``/``compute``, a backend MAY implement the
     round-pipelined pair ``prepare_segments``/``compute_segment`` (see
     ``backend_prepare_segments`` / ``backend_compute_segment`` for the
-    contract and the generic fallbacks the executors use otherwise).
+    contract and the generic fallbacks the executors use otherwise), and
+    the SDDMM pair ``sddmm``/``with_values`` that the sibling kernel
+    family (core.dist_sddmm) requires — see ``backend_sddmm`` /
+    ``backend_with_values``.
     """
 
     name: str
@@ -132,6 +138,54 @@ def backend_compute_segment(be: "LocalSpmmBackend", piece: Piece,
 
 
 # ---------------------------------------------------------------------------
+# SDDMM contract (core.dist_sddmm executors)
+# ---------------------------------------------------------------------------
+#
+# The SDDMM kernel family reuses a piece's native layout with the
+# dataflow reversed: instead of folding stored values against dense ROWS
+# of B, every stored nonzero (i, j) SAMPLES the dot product x_i · y_j and
+# scales it by its stored value. Two methods close the loop:
+#
+# * ``sddmm(piece, x, y)`` — device side, inside the shard_map body.
+#   ``x`` indexes the piece's ROW space and ``y`` its COLUMN space (the
+#   executors hand each piece exactly the buffers its index spaces refer
+#   to — local rows for the diagonal, gathered rows for the covered
+#   parts). Returns the sampled values in the backend's NATIVE value
+#   layout (the same shape ``prepare`` stored them in), padding slots
+#   zero because their stored values are zero.
+# * ``with_values(piece, vals)`` — swap a piece's stored values for
+#   ``vals`` (a ``sddmm`` result), leaving the index structure untouched.
+#   This is what lets FusedMM chain SDDMM→SpMM without re-laying out
+#   anything: the sampled values drop straight into the SpMM kernels.
+#   Shape-agnostic over the leading process axis, so it works both on
+#   stripped pieces inside shard_map and on stacked [P, ...] arrays.
+
+
+def backend_sddmm(be: "LocalSpmmBackend", piece: Piece, x: jax.Array,
+                  y: jax.Array) -> Piece:
+    """Sampled values for one (stripped) piece — backend method required."""
+    fn = getattr(be, "sddmm", None)
+    if fn is None:
+        raise NotImplementedError(
+            f"backend {be.name!r} implements no sddmm(piece, x, y); the "
+            f"kernel='sddmm'/'fused' family needs it (see CooBackend / "
+            f"BsrBackend for the contract).")
+    return fn(piece, x, y)
+
+
+def backend_with_values(be: "LocalSpmmBackend", piece: Piece,
+                        vals) -> Piece:
+    """Piece with stored values swapped for ``vals`` — method required."""
+    fn = getattr(be, "with_values", None)
+    if fn is None:
+        raise NotImplementedError(
+            f"backend {be.name!r} implements no with_values(piece, vals); "
+            f"the kernel='fused' executor needs it to feed sampled values "
+            f"back into the SpMM phase.")
+    return fn(piece, vals)
+
+
+# ---------------------------------------------------------------------------
 # COO backend (portable default)
 # ---------------------------------------------------------------------------
 
@@ -144,6 +198,16 @@ def coo_spmm_local(row: jax.Array, col: jax.Array, val: jax.Array,
     """
     gathered = b[col] * val[:, None]
     return jnp.zeros((m_out, b.shape[1]), b.dtype).at[row].add(gathered)
+
+
+def coo_sddmm_local(row: jax.Array, col: jax.Array, val: jax.Array,
+                    x: jax.Array, y: jax.Array) -> jax.Array:
+    """vals[e] = val[e] * (x[row[e]] · y[col[e]]) per stored nonzero.
+
+    Padded entries carry val == 0 (and row == col == 0, which gather
+    real but ignored rows), so they sample to exactly zero.
+    """
+    return val * (x[row] * y[col]).sum(axis=-1)
 
 
 def _stack_coo(csrs: List[CSRMatrix]) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -185,6 +249,13 @@ class CooBackend:
 
         return coo_accumulate_rows_op(acc, piece["row"], piece["col"],
                                       piece["val"], b_prefix)
+
+    def sddmm(self, piece: Piece, x: jax.Array, y: jax.Array) -> jax.Array:
+        return coo_sddmm_local(piece["row"], piece["col"], piece["val"],
+                               x, y)
+
+    def with_values(self, piece: Piece, vals: jax.Array) -> Piece:
+        return dict(piece, val=vals)
 
 
 # ---------------------------------------------------------------------------
@@ -309,6 +380,33 @@ class BsrBackend:
         out = bsr_spmm_acc_pallas(cols, blocks, b_p, acc_p, bn=self.bn,
                                   interpret=bool(interpret))
         return out[:m_out, :n].astype(b_prefix.dtype)
+
+    def sddmm(self, piece: Piece, x: jax.Array, y: jax.Array) -> jax.Array:
+        """Sampled [mb, t, bm, bk] block values = blocks ⊙ (X · Yᵀ).
+
+        X/Y row counts are padded up to the block grid and the contracted
+        feature width to a lane multiple — zero feature columns add
+        nothing to the dots, zero rows land only on padding slots.
+        """
+        from ..kernels.sddmm import bsr_sddmm_op
+
+        cols, blocks = piece["block_cols"], piece["blocks"]
+        mb, _, bm, bk = blocks.shape
+        kb = max(_round_up(y.shape[0], bk) // bk, 1)
+        f = x.shape[1]
+        f_pad = _round_up(max(f, 1), self.bn)
+        x3 = jnp.pad(x, ((0, mb * bm - x.shape[0]), (0, f_pad - f)))
+        x3 = x3.reshape(mb, bm, f_pad)
+        y3 = jnp.pad(y, ((0, kb * bk - y.shape[0]), (0, f_pad - f)))
+        y3 = y3.reshape(kb, bk, f_pad)
+        interpret = self.interpret
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return bsr_sddmm_op(cols, blocks, x3, y3, impl=self.impl,
+                            interpret=bool(interpret)).astype(x.dtype)
+
+    def with_values(self, piece: Piece, vals: jax.Array) -> Piece:
+        return dict(piece, blocks=vals)
 
 
 # ---------------------------------------------------------------------------

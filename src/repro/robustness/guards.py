@@ -30,9 +30,11 @@ __all__ = [
     "NumericalFault",
     "check_mode",
     "validate_dense_operand",
+    "validate_sddmm_operands",
     "validate_sparse_values",
     "validate_pattern",
     "sampled_finite_check",
+    "sampled_finite_check_tree",
 ]
 
 # rows sampled per addressable block under check="auto"
@@ -53,31 +55,62 @@ def check_mode(config) -> Any:
     return "full" if mode is True else mode
 
 
-def validate_dense_operand(b, *, k_expected: int, context: str) -> None:
-    """Shape/dtype validation of B with errors naming the caller's
-    objects — BEFORE device placement or lowering sees the mismatch.
+def validate_dense_operand(
+    b, *, k_expected: int, context: str, name: str = "B",
+    rows_label: str = "K", cols_label: str = "N",
+    rows_reason: str = "the plan contracts over",
+) -> None:
+    """Shape/dtype validation of a dense operand with errors naming the
+    caller's objects — BEFORE device placement or lowering sees the
+    mismatch. ``name``/``rows_label`` retarget the messages at the
+    two-dense-operand entry points (X, Y of SDDMM/fused).
 
-    Works on tracers too (shape and dtype are static), so a wrong B
-    inside a jitted step fails just as legibly.
+    Works on tracers too (shape and dtype are static), so a wrong
+    operand inside a jitted step fails just as legibly.
     """
     shape = tuple(getattr(b, "shape", np.shape(b)))
     if len(shape) != 2:
         raise ValueError(
-            f"{context}: B must be 2-D [K, N]; got shape {shape}. "
-            f"Reshape a vector operand to (K, 1).")
+            f"{context}: {name} must be 2-D [{rows_label}, {cols_label}]; "
+            f"got shape {shape}. "
+            f"Reshape a vector operand to ({rows_label}, 1).")
     if int(shape[0]) != int(k_expected):
         raise ValueError(
-            f"{context}: B has {shape[0]} rows but the plan contracts "
-            f"over K={k_expected} (C = A @ B with A's shape fixed at "
-            f"plan time); pass a [{k_expected}, N] operand or re-plan "
-            f"for the new A.")
+            f"{context}: {name} has {shape[0]} rows but {rows_reason} "
+            f"{rows_label}={k_expected} (C = A @ B with A's shape fixed at "
+            f"plan time); pass a [{k_expected}, {cols_label}] operand or "
+            f"re-plan for the new A.")
     dtype = getattr(b, "dtype", None)  # tracers carry one; lists don't
     dtype = np.dtype(dtype if dtype is not None else np.asarray(b).dtype)
     if dtype.kind not in "fc":
         raise TypeError(
-            f"{context}: B has dtype {dtype} but the kernels accumulate "
-            f"in floating point; cast to float32 (or another inexact "
-            f"dtype) before the call.")
+            f"{context}: {name} has dtype {dtype} but the kernels "
+            f"accumulate in floating point; cast to float32 (or another "
+            f"inexact dtype) before the call.")
+
+
+def validate_sddmm_operands(x, y, *, m_expected: int, k_expected: int,
+                            context: str) -> None:
+    """X/Y validation for the SDDMM and fused entry points.
+
+    X samples the pattern's ROW side (sharded like C) and Y its COLUMN
+    side (sharded like B); their feature widths must agree since every
+    stored nonzero contracts ``x_i · y_j``. Each error names the
+    offending operand, pre-XLA, tracer-safe.
+    """
+    validate_dense_operand(x, k_expected=m_expected, context=context,
+                           name="X", rows_label="M", cols_label="F",
+                           rows_reason="the plan's row partition fixes")
+    validate_dense_operand(y, k_expected=k_expected, context=context,
+                           name="Y", rows_label="K", cols_label="F",
+                           rows_reason="the plan's column partition fixes")
+    fx = int(tuple(getattr(x, "shape", np.shape(x)))[1])
+    fy = int(tuple(getattr(y, "shape", np.shape(y)))[1])
+    if fx != fy:
+        raise ValueError(
+            f"{context}: X has F={fx} feature columns but Y has F={fy}; "
+            f"SDDMM contracts x_i · y_j per stored nonzero, so the two "
+            f"dense operands must share one feature width.")
 
 
 def validate_sparse_values(a, *, context: str) -> None:
@@ -165,3 +198,42 @@ def sampled_finite_check(c, *, mode: Any = "auto",
             f"isfinite sweep). The producer is upstream — a poisoned "
             f"operand value or a broken backend kernel; set check=False "
             f"to serve unchecked.")
+
+
+def sampled_finite_check_tree(values, *, mode: Any = "auto",
+                              context: str = "DistSpmm",
+                              call_index: Optional[int] = None) -> None:
+    """The post-call sweep over a PYTREE of outputs (SDDMM's sampled
+    values: one leaf per piece, in the backend's native layout).
+
+    Each leaf runs the same row-sampled sweep as C; leaves are viewed as
+    2-D (leading dim = rows) so the BSR block layout sweeps too. The
+    fault message names the leaf's tree path instead of C's row/col.
+    """
+    import jax
+
+    for path, leaf in jax.tree_util.tree_leaves_with_path(values):
+        label = jax.tree_util.keystr(path)
+        for _, block in _blocks(leaf):
+            flat = np.asarray(block).reshape(block.shape[0], -1)
+            if flat.shape[0] == 0 or flat.shape[1] == 0:
+                continue
+            if mode in ("full", True) or flat.shape[0] <= _SAMPLE_ROWS:
+                rows = np.arange(flat.shape[0])
+            else:
+                rows = np.unique(np.linspace(0, flat.shape[0] - 1,
+                                             _SAMPLE_ROWS, dtype=np.int64))
+            sampled = flat[rows]
+            finite = np.isfinite(sampled)
+            if finite.all():
+                continue
+            where = np.argwhere(~finite)[0]
+            val = sampled[tuple(where)]
+            at = f" on call #{call_index}" if call_index is not None else ""
+            raise NumericalFault(
+                f"{context}: non-finite sampled value {val!r} in output "
+                f"leaf {label!r}{at} "
+                f"(check={'full' if mode in ('full', True) else 'auto'} "
+                f"isfinite sweep). The producer is upstream — a poisoned "
+                f"X/Y operand value or a broken backend kernel; set "
+                f"check=False to serve unchecked.")

@@ -14,8 +14,8 @@ short spelling. ``tests/test_api.py`` pins this parity: every symbol in
 ``repro.__all__`` must resolve identically through ``shiro``.
 """
 from repro.core.api import (  # noqa: F401
-    DistSpmm, SpmmConfig, compile_spmm, make_spmm_fn,
-    register_lowering_hook, unregister_lowering_hook,
+    DistSpmm, SpmmConfig, compile_fused, compile_sddmm, compile_spmm,
+    make_spmm_fn, register_lowering_hook, unregister_lowering_hook,
 )
 from repro.core.session import SpmmSession  # noqa: F401
 from repro.distributed.topology import Topology, TopologyError  # noqa: F401
@@ -32,6 +32,8 @@ __all__ = [
     "Topology",
     "TopologyError",
     "compile",
+    "compile_fused",
+    "compile_sddmm",
     "compile_spmm",
     "make_spmm_fn",
     "register_lowering_hook",

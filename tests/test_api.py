@@ -86,6 +86,11 @@ def test_shiro_namespace_parity():
     assert shiro.SpmmSession is SpmmSession
     assert shiro.Topology is Topology
     assert shiro.compile is repro.compile_spmm
+    # the fused kernel-family surface (sibling front doors)
+    from repro.core.api import compile_fused, compile_sddmm
+
+    assert shiro.compile_sddmm is compile_sddmm
+    assert shiro.compile_fused is compile_fused
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,314 @@
+"""Fused sparse kernel family: SDDMM + FusedMM on shared SHIRO plans.
+
+Three layers of contract:
+
+  executor level   flat/hier × single/bucketed × coo/bsr SDDMM values
+                   composed back through the SpMM phase match the dense
+                   oracle ``(A ⊙ (X Yᵀ)) @ B``, and ``*_fused`` matches
+                   the unfused SDDMM→SpMM composition exactly — same
+                   plan, same schedule, one communication phase.
+  handle level     the ``kernel=`` axis on SpmmConfig/DistSpmm: arity
+                   dispatch, tagged executable cache keys, per-call
+                   overrides, stats/guard/poison behavior.
+  HLO level        the fused executable's collective-permute pairs are
+                   EXACTLY the plain SpMM handle's on the same
+                   (pattern, schedule) — fusion adds no second gather
+                   round, only the reversed X rounds riding the same
+                   shift set.
+"""
+import re
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import (
+    SpmmConfig, compile_fused, compile_sddmm, compile_spmm,
+)
+from repro.core.comm_schedule import (
+    build_comm_schedule, build_hier_comm_schedule,
+)
+from repro.core.dist_sddmm import (
+    flat_fused, flat_sddmm, flat_spmm_values, hier_fused, hier_sddmm,
+    hier_spmm_values,
+)
+from repro.core.dist_spmm import flat_exec_arrays, hier_exec_arrays
+from repro.core.hierarchy import build_hier_plan
+from repro.core.local_backend import BsrBackend
+from repro.core.planner import build_plan
+from repro.launch.mesh import make_spmm_mesh
+from repro.models.gnn import GAT, gat_forward, gat_loss
+from repro.robustness import Fault, NumericalFault, inject
+
+P = 8
+G, L = 2, 4
+F, N = 8, 16
+BSR_SMALL = BsrBackend(block=(8, 8), bn=16)
+
+_PERMUTE_RE = re.compile(r"collective-permute(?:-start)?\(")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([\d,{}]*)\}")
+
+
+def _problem(power_law_matrix, seed=7):
+    a = power_law_matrix()
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((a.shape[0], F)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((a.shape[1], F)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((a.shape[1], N)).astype(np.float32))
+    return a, x, y, b
+
+
+def _oracle(a, x, y, b, edge=None):
+    s = a.to_dense() * (np.asarray(x) @ np.asarray(y).T)
+    if edge == "leaky_relu":
+        s = np.where(s > 0, s, 0.2 * s)
+    return s @ np.asarray(b)
+
+
+# ---------------------------------------------------------------------------
+# executor level: oracles + fused == unfused composition
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("K", [None, 1, 4], ids=["single", "K1", "K4"])
+@pytest.mark.parametrize("backend", ["coo", "bsr"])
+def test_flat_sddmm_fused_match_oracle(power_law_matrix, K, backend):
+    a, x, y, b = _problem(power_law_matrix)
+    ref = _oracle(a, x, y, b)
+    plan = build_plan(a, P, "joint")
+    sched = None if K is None else build_comm_schedule(plan, K=K)
+    ex = flat_exec_arrays(plan, backends=("coo", BSR_SMALL), schedule=sched)
+    mesh = make_spmm_mesh(P)
+    vals = flat_sddmm(ex, x, y, mesh, backend=backend)
+    composed = flat_spmm_values(ex, vals, b, mesh, backend=backend)
+    np.testing.assert_allclose(np.asarray(composed), ref, rtol=2e-4,
+                               atol=2e-4)
+    fused = flat_fused(ex, x, y, b, mesh, backend=backend)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(composed),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("K", [None, 1, 4], ids=["single", "K1", "K4"])
+@pytest.mark.parametrize("backend", ["coo", "bsr"])
+def test_hier_sddmm_fused_match_oracle(power_law_matrix, K, backend):
+    a, x, y, b = _problem(power_law_matrix)
+    ref = _oracle(a, x, y, b)
+    hp = build_hier_plan(build_plan(a, P, "joint"), G, L)
+    sched = None if K is None else build_hier_comm_schedule(hp, K=K)
+    ex = hier_exec_arrays(hp, backends=("coo", BSR_SMALL), schedule=sched)
+    mesh = make_spmm_mesh(P, groups=G)
+    vals = hier_sddmm(ex, x, y, mesh, backend=backend)
+    composed = hier_spmm_values(ex, vals, b, mesh, backend=backend)
+    np.testing.assert_allclose(np.asarray(composed), ref, rtol=2e-4,
+                               atol=2e-4)
+    fused = hier_fused(ex, x, y, b, mesh, backend=backend)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(composed),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("backend", ["coo", "bsr"])
+def test_edge_nonlinearity_applied_between_phases(power_law_matrix, backend):
+    """edge= transforms the sampled values BEFORE the SpMM phase; the
+    zero-preserving contract makes the dense elementwise oracle exact."""
+    a, x, y, b = _problem(power_law_matrix)
+    plan = build_plan(a, P, "joint")
+    ex = flat_exec_arrays(plan, backends=("coo", BSR_SMALL),
+                          schedule=build_comm_schedule(plan, K=4))
+    mesh = make_spmm_mesh(P)
+    out = flat_fused(ex, x, y, b, mesh, backend=backend, edge="leaky_relu")
+    np.testing.assert_allclose(np.asarray(out),
+                               _oracle(a, x, y, b, edge="leaky_relu"),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# handle level: the kernel= axis
+# ---------------------------------------------------------------------------
+
+
+def test_config_kernel_validation():
+    with pytest.raises(ValueError, match="kernel"):
+        SpmmConfig(kernel="spgemm")
+    with pytest.raises(ValueError, match="edge"):
+        SpmmConfig(kernel="fused", edge="softmax")
+    with pytest.raises(ValueError, match="edge"):
+        SpmmConfig(kernel="spmm", edge="leaky_relu")
+    assert SpmmConfig(kernel="fused", edge="leaky_relu").edge == "leaky_relu"
+
+
+def test_fused_handle_serves_and_stats(power_law_matrix):
+    a, x, y, b = _problem(power_law_matrix)
+    h = compile_fused(a, P, backends=("coo", BSR_SMALL), edge="leaky_relu")
+    ref = _oracle(a, x, y, b, edge="leaky_relu")
+    np.testing.assert_allclose(np.asarray(h(x, y, b)), ref, rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h(x, y, b, backend="bsr")), ref,
+                               rtol=2e-4, atol=2e-4)
+    st = h.stats()
+    assert st["kernel"] == "fused" and st["edge"] == "leaky_relu"
+    assert st["overlap"] is False          # non-spmm always staged
+    assert "modeled_time_fused" in st
+    assert st["donated_buffers"] == ()     # donation is spmm-only
+    # tagged cache keys; one lowering per (backend) shape served
+    keys = h.cache_info()["keys"]
+    assert len(keys) == 2 and all(k[0] == "fused" for k in keys)
+    h(x, y, b)
+    assert h.cache_hits >= 1
+
+
+def test_sddmm_handle_and_per_call_kernel(power_law_matrix):
+    a, x, y, b = _problem(power_law_matrix)
+    s_ref = a.to_dense() * (np.asarray(x) @ np.asarray(y).T)
+    hs = compile_sddmm(a, P)
+    vals = hs(x, y)
+    assert sorted(vals) == ["colp", "diag", "rowp"]
+    assert hs.stats()["kernel"] == "sddmm"
+    # the values round-trip: compose through the same handle's plan
+    composed = hs(x, y, b, kernel="fused")
+    np.testing.assert_allclose(np.asarray(composed), s_ref @ np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+    # a plain spmm handle serves the siblings per-call too
+    h0 = compile_spmm(a, P)
+    assert h0.stats()["kernel"] == "spmm"
+    np.testing.assert_allclose(
+        np.asarray(h0(x, y, b, kernel="fused", edge="leaky_relu")),
+        _oracle(a, x, y, b, edge="leaky_relu"), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h0(b)),
+                               a.to_dense() @ np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_arity_and_guard_errors(power_law_matrix):
+    a, x, y, b = _problem(power_law_matrix)
+    h = compile_spmm(a, P)
+    with pytest.raises(TypeError, match=r"kernel='spmm' takes 1"):
+        h(x, y)
+    with pytest.raises(TypeError, match=r"kernel='sddmm' takes 2"):
+        h(x, kernel="sddmm")
+    with pytest.raises(TypeError, match=r"kernel='fused' takes 3"):
+        h(x, y, kernel="fused")
+    with pytest.raises(TypeError, match="edge"):
+        h(b, edge="leaky_relu")
+    # operand validation names the offending operand, pre-XLA
+    with pytest.raises(ValueError, match="X has 32 rows"):
+        h(np.ones((32, F), np.float32), y, kernel="sddmm")
+    with pytest.raises(ValueError, match="Y has 32 rows"):
+        h(x, np.ones((32, F), np.float32), kernel="sddmm")
+    with pytest.raises(ValueError, match="X has F=8 .* Y has F=4"):
+        h(x, np.ones((64, 4), np.float32), kernel="sddmm")
+
+
+def test_sddmm_poisoned_output_raises_numerical_fault(power_law_matrix):
+    a, x, y, _ = _problem(power_law_matrix)
+    h = compile_sddmm(a, P)
+    h(x, y)  # healthy first
+    with inject([Fault(kind="nan_poison", site="output")]):
+        with pytest.raises(NumericalFault, match="output leaf"):
+            h(x, y)
+    assert h.stats()["numerical_faults"] == 1
+
+
+def test_warm_from_crosses_kernel_tagged_keys(power_law_matrix):
+    a, x, y, b = _problem(power_law_matrix)
+    h = compile_fused(a, P)
+    h(x, y, b)
+    h2 = compile_fused(a, P)
+    assert h2.warm_from(h) == 1
+    assert h2.cache_info()["keys"] == h.cache_info()["keys"]
+
+
+# ---------------------------------------------------------------------------
+# HLO level: one communication phase, same permute set as plain SpMM
+# ---------------------------------------------------------------------------
+
+
+def _permute_pairs(hlo: str):
+    pairs = set()
+    for group in _PAIRS_RE.findall(hlo):
+        pairs.update((int(s), int(t))
+                     for s, t in re.findall(r"\{(\d+),(\d+)\}", group))
+    return pairs
+
+
+def test_fused_hlo_same_permute_set_as_spmm(power_law_matrix):
+    """The acceptance pin: on one (pattern, bucketed schedule) the fused
+    executable's collective-permute pairs equal the plain SpMM
+    handle's — the joint [Y|B] gather rides the SpMM rounds and the
+    reversed X rounds reuse the C shifts, so fusion adds zero new
+    communication patterns (and no second gather round: the permute
+    count is spmm's plus exactly the |c_segments| X rounds)."""
+    a, _, _, _ = _problem(power_law_matrix)
+    h_spmm = compile_spmm(a, P, schedule=4, overlap=False)
+    h_fused = compile_fused(a, P, schedule=4)
+    meta = h_spmm.ex.meta
+    b_shifts = {d for d, _, _ in meta["b_segments"]}
+    c_shifts = {d for d, _, _ in meta["c_segments"]}
+    # precondition for strict set equality: every reversed X shift is
+    # already demanded by some B/C round (true for this dense-enough
+    # power-law pattern — all P-1 shifts carry rows)
+    assert {(P - d) % P for d in c_shifts} <= (b_shifts | c_shifts)
+    hlo_spmm = h_spmm.lowered_hlo(N)
+    hlo_fused = h_fused.lowered_hlo(N, n_feat=F)
+    assert _permute_pairs(hlo_fused) == _permute_pairs(hlo_spmm)
+    n_spmm = len(_PERMUTE_RE.findall(hlo_spmm))
+    n_fused = len(_PERMUTE_RE.findall(hlo_fused))
+    assert n_fused == n_spmm + len(meta["c_segments"])
+
+
+# ---------------------------------------------------------------------------
+# GAT: training end-to-end through one fused handle
+# ---------------------------------------------------------------------------
+
+
+def test_gat_grads_match_dense_oracle(power_law_matrix):
+    a, _, _, _ = _problem(power_law_matrix)
+    n = a.shape[0]
+    rng = np.random.default_rng(3)
+    feats = jnp.asarray(rng.standard_normal((n, F)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 4, n))
+    model = GAT(n_nodes=n, feat_dim=F, hidden=16, n_classes=4, att_dim=8)
+    params = model.init(jax.random.PRNGKey(0))
+
+    h = compile_fused(a, P, edge="leaky_relu")
+    a_d = jnp.asarray(a.to_dense())
+
+    def oracle_fused(q, k, v):
+        s = a_d * (q @ k.T)
+        return jax.nn.leaky_relu(s, negative_slope=0.2) @ v
+
+    out = gat_forward(params, feats, h)
+    ref = gat_forward(params, feats, oracle_fused)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+    g = jax.grad(gat_loss)(params, feats, labels, h)
+    g_ref = jax.grad(gat_loss)(params, feats, labels, oracle_fused)
+    for got, want in zip(jax.tree_util.tree_leaves(g),
+                         jax.tree_util.tree_leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_gat_forward_bsr_backend(power_law_matrix):
+    """BSR serves GAT forwards (grads stay coo: the fused SpMM phase's
+    bsr compute has no JVP)."""
+    a, _, _, _ = _problem(power_law_matrix)
+    n = a.shape[0]
+    rng = np.random.default_rng(4)
+    feats = jnp.asarray(rng.standard_normal((n, F)).astype(np.float32))
+    model = GAT(n_nodes=n, feat_dim=F, hidden=16, n_classes=4, att_dim=8)
+    params = model.init(jax.random.PRNGKey(1))
+    h = compile_fused(a, P, backends=("coo", BSR_SMALL), edge="leaky_relu")
+    a_d = jnp.asarray(a.to_dense())
+
+    def oracle_fused(q, k, v):
+        s = a_d * (q @ k.T)
+        return jax.nn.leaky_relu(s, negative_slope=0.2) @ v
+
+    out = gat_forward(params, feats,
+                      lambda q, k, v: h(q, k, v, backend="bsr"))
+    ref = gat_forward(params, feats, oracle_fused)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
