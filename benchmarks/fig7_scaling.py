@@ -1,4 +1,4 @@
-"""Paper Fig. 7: strong scaling, 2 -> 128 processes.
+"""Paper Fig. 7: strong scaling, 2 -> 128 processes + the 1.5D crossover.
 
 Wall-clock on real hardware is not available in this container, so this
 benchmark reports the two-tier α-β MODEL time (comm volumes are exact,
@@ -7,39 +7,124 @@ The paper's qualitative claims this reproduces:
   * baselines (block/col/row) stop scaling at ~8 GPUs;
   * joint + hierarchical keeps scaling to 128;
   * mawi-like matrices show the largest gap.
+
+On top of the per-strategy sweep, every process count scores the
+replicated (1.5D) tier — c lanes of s = P/c shards with B replicated
+c-fold and the partial C reduce-scattered over the replica axis — under
+a per-device ``MEMORY_BUDGET``, exactly the ``SpmmConfig(replicate=
+"auto")`` comparison. Each dataset emits one ``fig7/<ds>/crossover``
+record whose ``crossover_p`` is the smallest swept P where a
+within-budget c > 1 beats the flat schedule; the bench-smoke gate holds
+that value (a later or vanished crossover means the replicated tier
+stopped paying for itself and fails CI). ``NO_CROSSOVER`` (2 · max P)
+stands in when replication never wins in the sweep.
 """
 from __future__ import annotations
 
-from repro.core.comm_model import TSUBAME_LIKE, modeled_time, modeled_time_hier
+import os
+
+from repro.core.comm_model import (
+    TSUBAME_LIKE, choose_schedule, modeled_time, modeled_time_hier,
+    modeled_time_replicated, modeled_time_staged, replicated_device_bytes,
+)
+from repro.core.comm_schedule import build_replicated_schedule
 from repro.core.hierarchy import build_hier_plan
-from repro.core.planner import build_plan
+from repro.core.planner import build_plan, replicate_plan
 
 from .common import DATASETS, fmt_row
 
 N_DENSE = 32
 PROCS = [2, 4, 8, 16, 32, 64, 128]
+SMOKE_PROCS = [4, 8, 16, 32]
+FULL_DATASETS = ("social-pl", "mawi-hub", "mesh-band")
+SMOKE_DATASETS = ("social-pl", "mesh-band")
+REPL_CANDS = (2, 4, 8)
+# per-device byte budget the replication sweep honors (c-fold B copies
+# must still fit); sized so small-c lanes fit the 1024-row proxies
+MEMORY_BUDGET = 1 << 20
 
 
-def run() -> list:
+def _diag_time(plan) -> float:
+    """Diagonal-block compute the staged schedule model excludes."""
+    if not plan.a_diag:
+        return 0.0
+    return max(blk.nnz for blk in plan.a_diag) * 2.0 * N_DENSE / 1e12
+
+
+def _flat_time(a, p: int, net) -> float:
+    """Best staged flat schedule time INCLUDING the diagonal term, so it
+    compares offset-free against ``modeled_time_replicated``."""
+    plan = build_plan(a, p, "joint")
+    sched, _ = choose_schedule(plan, N_DENSE, net, k_max=4)
+    return modeled_time_staged(plan, sched, N_DENSE, net) + _diag_time(plan)
+
+
+def _replicated_best(a, p: int, net, budget: int):
+    """(time, c) of the best within-budget replicated candidate, else None."""
+    best = None
+    for c in REPL_CANDS:
+        if p % c or p // c < 2:
+            continue
+        s = p // c
+        base = build_plan(a, s, "joint")
+        sizes = {hi - lo for lo, hi in base.bounds}
+        if len(sizes) != 1 or sizes.pop() % c or base.shape[1] % s:
+            continue
+        rp = replicate_plan(base, c)
+        rsched = build_replicated_schedule(rp)
+        if replicated_device_bytes(rp, rsched, N_DENSE) > budget:
+            continue
+        t = modeled_time_replicated(rp, rsched, N_DENSE, net)
+        if best is None or t < best[0]:
+            best = (t, c)
+    return best
+
+
+def run(datasets=None, procs=None) -> list:
+    net = TSUBAME_LIKE
+    if datasets is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+        datasets = SMOKE_DATASETS if smoke else FULL_DATASETS
+        procs = SMOKE_PROCS if smoke else PROCS
+    procs = procs or PROCS
     rows = []
-    for ds in ("social-pl", "mawi-hub", "mesh-band"):
+    for ds in datasets:
         a = DATASETS[ds](0)
-        for p in PROCS:
+        crossover = None
+        crossover_c = 1
+        for p in procs:
             if a.shape[0] % p:
                 continue
             entry = {}
             for strat in ("block", "col", "joint"):
                 plan = build_plan(a, p, strat)
-                entry[strat] = modeled_time(plan, N_DENSE, TSUBAME_LIKE)
+                entry[strat] = modeled_time(plan, N_DENSE, net)
             plan = build_plan(a, p, "joint")
-            g = max(p // TSUBAME_LIKE.group_size, 1)
-            if p % g == 0 and p // g >= 1 and p > g:
+            g = max(p // net.group_size, 1)
+            if p % g == 0 and p > g:
                 hier = build_hier_plan(plan, g, p // g)
-                entry["shiro"] = modeled_time_hier(hier, N_DENSE, TSUBAME_LIKE)
+                entry["shiro"] = modeled_time_hier(hier, N_DENSE, net)
             else:
                 entry["shiro"] = entry["joint"]
-            derived = ";".join(f"{k}={v * 1e6:.1f}us" for k, v in entry.items())
-            best = min(entry, key=entry.get)
+            t_flat = _flat_time(a, p, net)
+            best = _replicated_best(a, p, net, MEMORY_BUDGET)
+            c = best[1] if best is not None and best[0] < t_flat else 1
+            if c > 1 and crossover is None:
+                crossover, crossover_c = p, c
+            t_best = best[0] if c > 1 else t_flat
+            derived = ";".join(f"{k}={v * 1e6:.3f}" for k, v in entry.items())
+            derived += (f";flat_staged={t_flat * 1e6:.3f}"
+                        f";replicate={c}"
+                        f";modeled_time={t_best * 1e6:.3f}")
+            if best is not None:
+                derived += f";replicated_staged={best[0] * 1e6:.3f}"
             rows.append(fmt_row(f"fig7/{ds}/p{p}", entry["shiro"] * 1e6,
-                                derived + f";best={best}"))
+                                derived))
+        # NO_CROSSOVER sentinel: past every swept P, so a vanished
+        # crossover gates as a regression instead of slipping through
+        cp = crossover if crossover is not None else 2 * max(procs)
+        rows.append(fmt_row(
+            f"fig7/{ds}/crossover", float(cp),
+            f"crossover_p={cp};replicate={crossover_c}"
+            f";memory_budget={MEMORY_BUDGET};n_dense={N_DENSE}"))
     return rows

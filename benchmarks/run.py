@@ -67,8 +67,12 @@ EXIT_CRASHED = 2
 # to run and are tracked, not gated). total_allocation_size is an XLA
 # property of the compiled executable — deterministic per jax version,
 # so it is only gated when the baseline record's "jax" stamp matches
-# the running version (see compare_records).
-GATE_FIELDS = ("padded_rows", "modeled_time", "total_allocation_size")
+# the running version (see compare_records). crossover_p is the modeled
+# 1.5D scaling crossover (fig7_scaling): a LARGER value means the
+# replicated tier stopped winning until later (or at all) — a strategy
+# regression, gated like the others.
+GATE_FIELDS = ("padded_rows", "modeled_time", "total_allocation_size",
+               "crossover_p")
 
 
 def _jax_version() -> str:

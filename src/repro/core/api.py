@@ -76,22 +76,25 @@ from .comm_model import (
     modeled_time, modeled_time_fused_schedule, modeled_time_hier,
     modeled_time_hier_fused_schedule, modeled_time_hier_overlap,
     modeled_time_hier_schedule, modeled_time_hier_staged,
-    modeled_time_overlap, modeled_time_schedule, modeled_time_staged,
+    modeled_time_overlap, modeled_time_replicated, modeled_time_schedule,
+    modeled_time_staged, replicated_device_bytes,
 )
 from .comm_schedule import (
-    CommSchedule, build_comm_schedule, build_hier_comm_schedule,
+    CommSchedule, ReplicatedSchedule, build_comm_schedule,
+    build_hier_comm_schedule, build_replicated_schedule,
     single_round_hier_schedule, single_round_schedule,
 )
 from .dist_sddmm import (
     EDGE_FNS, flat_fused, flat_sddmm, hier_fused, hier_sddmm,
 )
 from .dist_spmm import (
-    BackendSpec, FlatExecPlan, HierExecPlan, flat_exec_arrays, flat_spmm,
-    hier_exec_arrays, hier_spmm,
+    BackendSpec, FlatExecPlan, HierExecPlan, ReplicatedExecPlan,
+    flat_exec_arrays, flat_spmm, hier_exec_arrays, hier_spmm,
+    replicated_exec_arrays, replicated_spmm,
 )
 from .hierarchy import HierPlan, build_hier_plan
 from .local_backend import get_backend
-from .planner import SpmmPlan, Strategy, build_plan
+from .planner import SpmmPlan, Strategy, build_plan, replicate_plan
 from .sparse import CSRMatrix, PatternSnapshot
 
 __all__ = [
@@ -111,10 +114,12 @@ _KERNELS = ("spmm", "sddmm", "fused")
 _UNSET = object()
 _SAVE_FORMAT = "shiro.DistSpmm"
 # v1: PR 3 (no pattern snapshot). v2: adds the planned-pattern snapshot
-# (drift detection) and records the planning topology. Loaders reject
-# anything they don't know how to rebuild — see ``DistSpmm.load``.
-_SAVE_VERSION = 2
-_KNOWN_VERSIONS = (1, 2)
+# (drift detection) and records the planning topology. v3: the schedule
+# slot may carry a ReplicatedSchedule (1.5D rung — the plan slot then
+# holds the s-shard base plan, P = schedule.P). Loaders reject anything
+# they don't know how to rebuild — see ``DistSpmm.load``.
+_SAVE_VERSION = 3
+_KNOWN_VERSIONS = (1, 2, 3)
 
 # hooks called as hook(handle, key) each time the handle lowers+compiles a
 # NEW executable — tests count cache behavior here. Keys are
@@ -211,6 +216,19 @@ class SpmmConfig:
     ``profile_topk``   how many model-ranked candidates to time-profile.
     ``profile_iters``  timed runs per candidate (median is kept).
     ``profile_warmup`` discarded warmup runs per candidate.
+    ``replicate``      1.5D replication factor ``c``: B is replicated
+                       across ``c`` lanes of ``s = P/c`` shards, each
+                       lane covers a disjoint subset of the nonzero
+                       shifts, and the partial C is reduce-scattered
+                       over the replica axis. ``1`` (default) keeps the
+                       flat/hier executors untouched; an int ``c > 1``
+                       forces a c-lane plan (raising if P, the row
+                       blocks or the B partition don't divide);
+                       ``"auto"`` sweeps feasible c ∈ {2, 4, 8} under
+                       ``memory_budget`` and keeps the winner iff
+                       ``modeled_time_replicated`` beats the chosen
+                       flat/hier time. Only ``kernel="spmm"``; c > 1
+                       executes staged (no ``overlap``).
     ``check``          serving-path guardrails (``robustness.guards``):
                        ``"auto"`` (default) validates B's shape/dtype
                        with actionable errors before XLA sees the
@@ -243,6 +261,7 @@ class SpmmConfig:
     profile_iters: int = 3
     profile_warmup: int = 1
     check: Union[str, bool] = "auto"
+    replicate: Union[int, str] = 1
 
     def __post_init__(self) -> None:
         if self.kernel not in _KERNELS:
@@ -293,6 +312,18 @@ class SpmmConfig:
             raise ValueError(
                 f"memory_budget is a per-device byte count > 0 (or None); "
                 f"got {self.memory_budget!r}")
+        if isinstance(self.replicate, bool) or not (
+                self.replicate == "auto"
+                or (isinstance(self.replicate, int) and self.replicate >= 1)):
+            raise ValueError(
+                f"replicate must be 'auto' or an int c >= 1; "
+                f"got {self.replicate!r}")
+        if self.replicate != 1 and self.kernel != "spmm":
+            raise ValueError(
+                f"replicate= applies to kernel='spmm' only; the sddmm/"
+                f"fused executors have no replicated tier yet "
+                f"(got kernel={self.kernel!r}, "
+                f"replicate={self.replicate!r})")
         if int(self.profile_topk) < 1 or int(self.profile_iters) < 1 \
                 or int(self.profile_warmup) < 0:
             raise ValueError(
@@ -336,7 +367,8 @@ class DistSpmm:
 
     def __init__(self, *, config: SpmmConfig, plan: SpmmPlan,
                  hier: Optional[HierPlan], schedule: CommSchedule,
-                 ex: Union[FlatExecPlan, HierExecPlan], mesh: Mesh,
+                 ex: Union[FlatExecPlan, HierExecPlan, ReplicatedExecPlan],
+                 mesh: Mesh,
                  axis_kwargs: Dict[str, str], decisions: Dict[str, Any],
                  snapshot: Optional[PatternSnapshot] = None,
                  topology: Optional[Topology] = None):
@@ -380,10 +412,18 @@ class DistSpmm:
         self._check = guards.check_mode(config)
         self.calls = 0             # concrete __call__ executions served
         self.numerical_faults = 0  # C sweeps that raised NumericalFault
+        # replicated (1.5D) rungs route by schedule kind: the plan slot
+        # holds the s-shard base plan and the exec plan leads [c, s, ...]
+        self.replicated = getattr(schedule, "kind", "") == "replicated"
         # B is row-sharded over every mesh axis; pinning it at lowering
         # time lets the AOT executables accept any caller layout (we
-        # reshard on call instead of failing the dispatch-time check)
-        if hier is not None:
+        # reshard on call instead of failing the dispatch-time check).
+        # Replicated handles shard B over the lane axis only — the c-fold
+        # copy over the replica axis IS the strategy's memory trade.
+        if self.replicated:
+            spec = PartitionSpec(self.axis_kwargs["axis"])
+            ex_spec = PartitionSpec(*self.axis_kwargs.values())
+        elif hier is not None:
             spec = PartitionSpec(tuple(self.axis_kwargs.values()))
             ex_spec = PartitionSpec(*self.axis_kwargs.values())
         else:
@@ -396,20 +436,27 @@ class DistSpmm:
         # Same-pattern value refreshes then swap arrays under the compiled
         # code instead of re-lowering (see ``refresh_values``).
         self._ex_sharding = NamedSharding(self.mesh, ex_spec)
-        self._ex_dev: Optional[Union[FlatExecPlan, HierExecPlan]] = None
+        self._ex_dev: Optional[Union[FlatExecPlan, HierExecPlan,
+                                      ReplicatedExecPlan]] = None
         # B-buffer donation is only always-usable when C has B's exact
         # geometry (square operand) — skip otherwise rather than emit
         # unusable-donation warnings on every call. Sibling-kernel
         # handles skip it entirely: their executables take three
         # operands and the alias bookkeeping isn't worth the edge cases.
+        # ... and replicated handles skip it too: B (lane-sharded,
+        # replica-broadcast) and C (sharded over both axes) never share a
+        # layout, so the alias is unusable by construction.
         self._donate = (bool(config.donate) and self.kernel == "spmm"
+                        and not self.replicated
                         and plan.shape[0] == plan.shape[1])
 
     # ----- execution ---------------------------------------------------
 
     @property
     def strategy(self) -> str:
-        """Chosen executor tier: 'flat' or 'hier'."""
+        """Chosen executor tier: 'flat', 'hier' or 'replicated'."""
+        if self.replicated:
+            return "replicated"
         return "hier" if self.hier is not None else "flat"
 
     @property
@@ -423,6 +470,9 @@ class DistSpmm:
 
     def _raw_call(self, b: jax.Array, backend: str) -> jax.Array:
         """The traceable executor path (used under jit and for lowering)."""
+        if self.replicated:
+            return replicated_spmm(self.ex, b, self.mesh, backend=backend,
+                                   **self.axis_kwargs)
         if self.hier is not None:
             return hier_spmm(self.ex, b, self.mesh, backend=backend,
                              overlap=self.overlap, **self.axis_kwargs)
@@ -447,7 +497,8 @@ class DistSpmm:
         return flat_fused(self.ex, x, y, b, self.mesh, backend=backend,
                           edge=edge, **self.axis_kwargs)
 
-    def _device_ex(self) -> Union[FlatExecPlan, HierExecPlan]:
+    def _device_ex(self) -> Union[FlatExecPlan, HierExecPlan,
+                                  ReplicatedExecPlan]:
         """The exec-plan pytree committed onto the mesh (lazy, cached)."""
         if self._ex_dev is None:
             self._ex_dev = jax.tree_util.tree_map(
@@ -460,7 +511,11 @@ class DistSpmm:
         if compiled is not None:
             self.cache_hits += 1
             return compiled
-        if self.hier is not None:
+        if self.replicated:
+            def call(ex, b):
+                return replicated_spmm(ex, b, self.mesh, backend=backend,
+                                       **self.axis_kwargs)
+        elif self.hier is not None:
             def call(ex, b):
                 return hier_spmm(ex, b, self.mesh, backend=backend,
                                  overlap=self.overlap, **self.axis_kwargs)
@@ -554,6 +609,12 @@ class DistSpmm:
                     "edge= applies to the sampled values of "
                     "kernel='sddmm'/'fused'; kernel='spmm' has none")
             return kern, None
+        if self.replicated:
+            raise ValueError(
+                f"kernel={kern!r} has no replicated executor; this "
+                f"handle was compiled with replicate="
+                f"{self.decisions.get('replicate')} — recompile with "
+                f"replicate=1 for sddmm/fused calls")
         edge_name = self.edge if edge is _UNSET else edge
         if edge_name is not None and edge_name not in EDGE_FNS:
             raise ValueError(
@@ -722,10 +783,16 @@ class DistSpmm:
         (caller should fall back to a full replan / hot swap).
         """
         overlap = bool(decisions.get("overlap", False))
+        replicated = getattr(schedule, "kind", "") == "replicated"
         if (overlap != self.overlap
+                or replicated != self.replicated
                 or (hier is None) != (self.hier is None)):
             return False
-        if hier is not None:
+        if replicated:
+            new_ex = replicated_exec_arrays(schedule.rplan,
+                                            backends=self.config.backends,
+                                            schedule=schedule)
+        elif hier is not None:
             new_ex = hier_exec_arrays(hier, backends=self.config.backends,
                                       schedule=schedule,
                                       overlap_layouts=overlap)
@@ -821,6 +888,11 @@ class DistSpmm:
         )
         out.setdefault("decision_source", "model")
         out.setdefault("measured_time", None)
+        out.setdefault("replicate", 1)
+        if self.replicated:
+            # plan.P is the lane width s; the handle spans c·s devices
+            out.update(P=sched.P, replicate=sched.c, replica_shards=sched.s,
+                       schedule_K=sched.K)
         # prefer what the compiled executables actually pin over the
         # profiling-time record riding in ``decisions``
         mem = [m["total_allocation_size"] for m in self._memory.values()
@@ -842,10 +914,15 @@ class DistSpmm:
 
     def __repr__(self) -> str:
         sched = self.schedule
-        tier = (f"hier(G={self.hier.G},L={self.hier.L})"
-                if self.hier is not None else "flat")
+        if self.replicated:
+            tier = f"replicated(c={sched.c},s={sched.s})"
+        elif self.hier is not None:
+            tier = f"hier(G={self.hier.G},L={self.hier.L})"
+        else:
+            tier = "flat"
+        P = sched.P if self.replicated else self.plan.P
         return (f"DistSpmm({self.plan.shape[0]}x{self.plan.shape[1]}, "
-                f"P={self.plan.P}, {tier}, schedule={sched.kind}"
+                f"P={P}, {tier}, schedule={sched.kind}"
                 f"{f'/K={sched.K}' if sched.kind == 'bucketed' else ''}"
                 f"{', overlapped' if self.overlap else ''}"
                 f"{f', kernel={self.kernel}' if self.kernel != 'spmm' else ''}"
@@ -936,12 +1013,17 @@ def materialize_payload(payload: Dict[str, Any],
     """Version-check + topology-check + device prep for a saved plan."""
     check_payload_version(payload, source)
     plan: SpmmPlan = payload["plan"]
-    topo = Topology.resolve(plan.P if where is None else where)
-    if topo.P != plan.P:
+    schedule = payload["schedule"]
+    # a replicated rung's plan slot holds the s-shard base plan; the
+    # rung itself spans schedule.P = c·s devices
+    want_p = (schedule.P
+              if getattr(schedule, "kind", "") == "replicated" else plan.P)
+    topo = Topology.resolve(want_p if where is None else where)
+    if topo.P != want_p:
         raise ValueError(
-            f"{source!r} was planned for P={plan.P} processes but the "
+            f"{source!r} was planned for P={want_p} processes but the "
             f"given topology has P={topo.P} devices ({topo.kind}); pass "
-            f"any Topology/mesh with exactly {plan.P} devices, or "
+            f"any Topology/mesh with exactly {want_p} devices, or "
             f"re-plan for P={topo.P} (SpmmSession ladders pre-plan "
             f"multiple P rungs for exactly this).")
     return _materialize(payload["config"], plan, payload["hier"],
@@ -962,7 +1044,12 @@ def _materialize(config: SpmmConfig, plan: SpmmPlan,
     # only materialize the per-round consumable layouts when the
     # autotuned decision actually executes overlapped
     overlap = bool(decisions.get("overlap", False))
-    if hier is not None:
+    if getattr(schedule, "kind", "") == "replicated":
+        m, ra, ax = topo.replicated_mesh(schedule.c, schedule.s)
+        ex = replicated_exec_arrays(schedule.rplan, backends=config.backends,
+                                    schedule=schedule)
+        axis_kwargs = {"replica_axis": ra, "axis": ax}
+    elif hier is not None:
         m, ga, la = topo.hier_mesh(hier.G, hier.L)
         ex = hier_exec_arrays(hier, backends=config.backends,
                               schedule=schedule, overlap_layouts=overlap)
@@ -1116,6 +1203,74 @@ def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
     decisions["overlap"] = use_overlap
     decisions["decision_source"] = "model"
 
+    # ----- replication (1.5D): c lanes of s = P/c shards --------------
+    # The only strategy that changes the mesh shape itself: B is
+    # replicated across c lanes, each lane exchanges only its subset of
+    # the s-shard shifts over the FAST s-device tier, and the partial C
+    # pays one replica-axis reduce-scatter. Wins at high P where the
+    # flat/hier exchange spans the slow tier but s <= group_size stays
+    # on the fast one.
+    decisions["replicate"] = 1
+    replicate = getattr(config, "replicate", 1)
+    if kernel == "spmm" and replicate != 1:
+        # modeled_time_replicated includes the diagonal-block compute
+        # that the staged/overlap fields exclude (their docstrings: it
+        # is common to both execution MODES) — add the same term to the
+        # unreplicated side so the cross-tier comparison is offset-free
+        diag = (max(blk.nnz for blk in plan.a_diag) * 2.0 * n_hint / 1e12
+                if plan.a_diag else 0.0)
+        t_base = (fields["modeled_time_overlap"] if use_overlap
+                  else fields["modeled_time_staged"]) + diag
+        budget = (int(config.memory_budget)
+                  if config.memory_budget is not None else None)
+        cands = (2, 4, 8) if replicate == "auto" else (int(replicate),)
+        best: Optional[Tuple[float, int, ReplicatedSchedule]] = None
+        infeasible: Dict[int, str] = {}
+        for c in cands:
+            if P % c or P // c < 2:
+                infeasible[c] = f"needs c | P={P} with s = P/c >= 2"
+                continue
+            s = P // c
+            base = build_plan(a, s, config.strategy, pad_to=config.pad_to)
+            sizes = {hi - lo for lo, hi in base.bounds}
+            m_local = sizes.pop() if len(sizes) == 1 else None
+            if m_local is None or m_local % c or base.shape[1] % s:
+                infeasible[c] = (
+                    f"needs uniform s={s}-way row/col blocks with "
+                    f"c={c} | m_local for the tiled replica "
+                    f"reduce-scatter (pad M and K first)")
+                continue
+            rp = replicate_plan(base, c)
+            rsched = build_replicated_schedule(rp)
+            # the budget prunes only the AUTO sweep (pick a c that
+            # fits); a forced c rides through and lets the session's
+            # rung filter skip it with the footprint on record
+            if replicate == "auto" and budget is not None:
+                need = replicated_device_bytes(rp, rsched, n_hint)
+                if need > budget:
+                    infeasible[c] = (f"replica footprint {need} B/device "
+                                     f"exceeds memory_budget {budget}")
+                    continue
+            t_rep = modeled_time_replicated(rp, rsched, n_hint, net)
+            decisions[f"modeled_time_replicated_c{c}"] = t_rep
+            if best is None or t_rep < best[0]:
+                best = (t_rep, c, rsched)
+        if best is None and replicate != "auto":
+            c = int(replicate)
+            raise ValueError(
+                f"replicate={c} is infeasible: "
+                f"{infeasible.get(c, 'no candidate survived')}")
+        if best is not None and (replicate != "auto" or best[0] < t_base):
+            t_rep, c, rsched = best
+            plan = rsched.rplan.base
+            hier = None
+            schedule = rsched
+            use_overlap = False
+            decisions["overlap"] = False
+            decisions["replicate"] = c
+            decisions["modeled_time_replicated"] = t_rep
+            decisions["modeled_time_unreplicated"] = t_base
+
     # ----- measured overlay (timed profiling / on-disk cache) ---------
     # Only when measurement is enabled AND the plan targets THIS
     # substrate: a ladder rung with P != topo.P has no devices to time
@@ -1123,7 +1278,11 @@ def _plan_and_tune(a: CSRMatrix, P: int, config: SpmmConfig,
     # The profiler drives spmm calls, so sibling kernels stay model-only.
     from . import autotune as _autotune
 
+    # (replicated rungs stay model-only: the profiler drives the
+    # flat/hier candidate set, and the replica decision is already a
+    # cross-tier model comparison)
     if (kernel == "spmm" and _autotune.measurement_enabled(config)
+            and decisions.get("replicate", 1) == 1
             and topo.P == P and not topo.is_multiprocess):
         plan, hier, schedule, decisions = _autotune.measured_decide(
             a, P, config, topo, plan=plan, hier=hier,

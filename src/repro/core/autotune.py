@@ -214,6 +214,7 @@ def _config_signature(config) -> Dict[str, Any]:
         "default_backend": config.default_backend,
         "schedule": config.schedule,
         "overlap": config.overlap,
+        "replicate": getattr(config, "replicate", 1),
         "net": "auto" if net == "auto" else dataclasses.asdict(net),
         "pad_to": config.pad_to,
         "n_dense_hint": config.n_dense_hint,
@@ -451,6 +452,13 @@ def estimate_device_bytes(plan, schedule, config) -> int:
     measured ``total_allocation_size``.
     """
     n = int(config.n_dense_hint)
+    if getattr(schedule, "kind", None) == "replicated":
+        # one B copy PER LANE, not per fleet: the flat estimate below
+        # would undercount a c-lane rung by (c-1) B shards per device
+        from .comm_model import replicated_device_bytes
+
+        return int(replicated_device_bytes(schedule.rplan, schedule,
+                                           int(config.n_dense_hint)))
     P = int(plan.P)
     m, k = plan.shape
 

@@ -81,10 +81,13 @@ __all__ = [
     "BackendSpec",
     "FlatExecPlan",
     "HierExecPlan",
+    "ReplicatedExecPlan",
     "flat_exec_arrays",
     "hier_exec_arrays",
+    "replicated_exec_arrays",
     "flat_spmm",
     "hier_spmm",
+    "replicated_spmm",
     "coo_spmm_local",
 ]
 
@@ -235,6 +238,36 @@ class HierExecPlan(_ExecPlanBase):
     @property
     def max_cg(self) -> int:
         return self.meta["max_cg"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ReplicatedExecPlan(_ExecPlanBase):
+    """Stacked per-device arrays for the replicated (1.5D) executor.
+
+    All leading axes are [c, s, ...] (lane-major: device (r, g) = linear
+    r·s + g) so they shard over the ('r', 'x') mesh. The static metadata
+    carries the pre-flattened round descriptors (``b_rounds`` /
+    ``c_rounds``): per round the per-lane shifts, the shared slot
+    ceiling, its offset in the R_b / R_c segment space, and the
+    participating lanes.
+    """
+
+    pieces: Dict[str, Pieces]
+    b_send_idx: jax.Array  # [c, s, R_b] int32, -1 pad
+    c_recv_rows: jax.Array  # [c, s, R_c] int32, -1 pad
+    agg_perm: jax.Array  # [c, s, R_c] int32
+    agg_meta: jax.Array  # [c, s, R_c+1] int32
+    seg_agg: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    meta: dict = dataclasses.field(metadata=dict(static=True), default_factory=dict)
+
+    @property
+    def c(self) -> int:
+        return self.meta["c"]
+
+    @property
+    def s(self) -> int:
+        return self.meta["s"]
 
 
 # ---------------------------------------------------------------------------
@@ -427,6 +460,53 @@ def hier_exec_arrays(hier: HierPlan,
                   overlap_ready=overlap_layouts,
                   local_b=local_b, local_c=local_c,
                   R_bg=layout.R_bg, R_cg=layout.R_cg),
+    )
+
+
+def replicated_exec_arrays(rp,
+                           backends: Sequence[BackendSpec] = ("coo",),
+                           schedule=None) -> ReplicatedExecPlan:
+    """Convert a ``planner.ReplicatedPlan`` into stacked device arrays.
+
+    ``schedule`` is a ``comm_schedule.ReplicatedSchedule`` (built from
+    the plan when None). The replicated executor is staged-only: the
+    lane rounds are few by construction (ceil((s-1)/c) shifts per lane)
+    and the reduce-scatter already serializes the tail, so there is no
+    per-round consumable axis here.
+    """
+    from .comm_schedule import (
+        build_replicated_schedule, replicated_schedule_layout,
+    )
+
+    sched = schedule or build_replicated_schedule(rp)
+    layout = replicated_schedule_layout(rp, sched)
+    c, s = rp.c, rp.s
+    m_local = _uniform_m_local(rp.base.bounds)
+    if m_local % c:
+        raise ValueError(
+            f"replicate={c} needs c | m_local for the tiled replica "
+            f"reduce-scatter (m_local={m_local}); pad M or pick another c")
+    piece_csrs = {"diag": layout.diag, "colp": layout.colp,
+                  "rowp": layout.rowp}
+    pieces, resolved = _prepare_pieces(piece_csrs, backends)
+    pieces = jax.tree_util.tree_map(
+        lambda x: x.reshape((c, s) + x.shape[1:]), pieces)
+    perm, meta_arr = _stack_sorted_scatter(
+        layout.c_recv_rows.reshape(c * s, layout.R_c))
+    b_rounds = tuple((rnd.shifts, rnd.slot_b, rnd.off_b, rnd.b_lanes)
+                     for rnd in sched.rounds if rnd.b_lanes)
+    c_rounds = tuple((rnd.shifts, rnd.slot_c, rnd.off_c, rnd.c_lanes)
+                     for rnd in sched.rounds if rnd.c_lanes)
+    return ReplicatedExecPlan(
+        pieces=pieces,
+        b_send_idx=jnp.asarray(layout.b_send_idx),
+        c_recv_rows=jnp.asarray(layout.c_recv_rows),
+        agg_perm=jnp.asarray(perm.reshape(c, s, -1)),
+        agg_meta=jnp.asarray(meta_arr.reshape(c, s, -1)),
+        meta=dict(c=c, s=s, m_local=m_local, backends=resolved,
+                  default_backend=next(iter(resolved)),
+                  schedule=sched, b_rounds=b_rounds, c_rounds=c_rounds,
+                  R_b=layout.R_b, R_c=layout.R_c),
     )
 
 
@@ -830,3 +910,95 @@ def hier_spmm(plan: HierExecPlan, b_global: jax.Array, mesh: Mesh,
     out = fn(pieces, plan.b_group_send_idx, plan.c_recv_rows,
              plan.agg_perm, plan.agg_meta, plan.seg_agg, b_global)
     return out.reshape(-1, b_global.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# replicated executor (1.5D: c lanes + replica-axis reduce-scatter)
+# ---------------------------------------------------------------------------
+
+
+def replicated_spmm(plan: ReplicatedExecPlan, b_global: jax.Array,
+                    mesh: Mesh, replica_axis: str = "r", axis: str = "x",
+                    backend: Optional[BackendSpec] = None,
+                    overlap: bool = False) -> jax.Array:
+    """Execute ``C = A @ B`` on a (c, s) replica × shard mesh.
+
+    ``b_global``: [K, N] dense matrix, row-sharded over ``axis`` ONLY —
+    every lane holds a full s-way shard (the c-fold B replication).
+    Per round, every participating lane runs ITS OWN shift's
+    collective-permute concurrently in one static ppermute over the
+    joint (replica, shard) axes; lanes outside the permutation receive
+    zeros, and their pieces carry no nonzeros in the segment. After the
+    lane-local compute + aggregation, the per-lane partial C blocks are
+    summed and scattered over ``replica_axis`` (``compat.psum_scatter``)
+    — the inter-lane traffic replication buys down to one dense
+    ``(c-1)/c``-sized block per device. Returns C [M, N] row-sharded
+    over (shard, replica) so global row order is preserved.
+    """
+    if overlap:
+        raise ValueError(
+            "the replicated executor is staged-only; overlap composes "
+            "with replicate=1 tiers (flat/hier) instead")
+    m_local = plan.meta["m_local"]
+    c_, s_ = plan.c, plan.s
+    R_b, R_c = plan.meta["R_b"], plan.meta["R_c"]
+    b_rounds = plan.meta["b_rounds"]
+    c_rounds = plan.meta["c_rounds"]
+    be, pieces = plan.resolve_backend(backend)
+    axes = (replica_axis, axis)
+
+    def _lane_perm(shifts, lanes):
+        # lane r's shift d pairs device (r, g) with (r, (g + d) % s):
+        # disjoint per-lane cycles, one static collective
+        return [(r * s_ + g, r * s_ + (g + shifts[r]) % s_)
+                for r in lanes for g in range(s_)]
+
+    def _exchange(rounds, buf, total, n, dtype):
+        parts = []
+        for shifts, slot, off, lanes in rounds:
+            seg = jax.lax.slice_in_dim(buf, off, off + slot)
+            parts.append((off, ppermute(seg, axes,
+                                        _lane_perm(shifts, lanes))))
+        if not parts:
+            return jnp.zeros((total, n), dtype)
+        parts.sort(key=lambda t: t[0])
+        out = jnp.concatenate([seg for _, seg in parts], axis=0)
+        if out.shape[0] < total:
+            out = jnp.concatenate(
+                [out, jnp.zeros((total - out.shape[0], n), dtype)], axis=0)
+        return out
+
+    def body(pieces, b_send_idx, c_recv_rows, agg_perm, agg_meta,
+             seg_agg, b_loc):
+        pieces = jax.tree_util.tree_map(lambda x: x[0, 0], pieces)
+        b_send_idx = b_send_idx[0, 0]
+        c_recv_rows = c_recv_rows[0, 0]
+        agg_perm, agg_meta = agg_perm[0, 0], agg_meta[0, 0]
+        n = b_loc.shape[1]
+
+        # ① pack + lane-exchange B rows, one joint ppermute per round
+        send_b = pack_rows_op(b_loc, b_send_idx)  # [R_b, N]
+        recv_b = _exchange(b_rounds, send_b, R_b, n, b_loc.dtype)
+
+        # ② partial C rows for this lane's shifts, exchanged per round
+        partials = be.compute(pieces["rowp"], b_loc, R_c)  # [R_c, N]
+        recv_c = _exchange(c_rounds, partials, R_c, n, b_loc.dtype)
+
+        # ③ lane-local compute: diagonal (lane 0 only, by construction)
+        #   + this lane's column-covered nonzeros
+        c = be.compute(pieces["diag"], b_loc, m_local)
+        c = c + be.compute(pieces["colp"], recv_b, m_local)
+
+        # ④ aggregate received partials, then sum + scatter the lanes'
+        #   C blocks over the replica axis
+        c = scatter_add_rows_exec_op(
+            c, recv_c, c_recv_rows, agg_perm, agg_meta)
+        return psum_scatter(c, replica_axis, scatter_dimension=0,
+                            tiled=True)  # [m_local / c, N]
+
+    rx = P(replica_axis, axis)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(rx,) * 6 + (P(axis),),
+                   out_specs=P((axis, replica_axis)))
+    return fn(pieces, plan.b_send_idx, plan.c_recv_rows,
+              plan.agg_perm, plan.agg_meta, plan.seg_agg, b_global)

@@ -130,6 +130,11 @@ class SpmmSession:
         snapshot = pattern_snapshot(a)
         rungs: Dict[int, LadderRung] = {}
         skipped: Dict[int, int] = {}
+        # the replicate decision each skipped rung was holding when it
+        # blew the budget (c-lane rungs carry c-1 extra B shards per
+        # device; ``rung_device_bytes`` prices that via the replicated
+        # estimate) — rides in the budget_skip event, keyed like skipped
+        skipped_replicate: Dict[int, int] = {}
         budget = config.memory_budget
         for P in ladder:
             plan, hier, schedule, decisions = _plan_and_tune(
@@ -140,6 +145,8 @@ class SpmmSession:
                 need = rung_device_bytes(plan, schedule, decisions, config)
                 if need > int(budget):
                     skipped[P] = int(need)
+                    skipped_replicate[P] = int(
+                        decisions.get("replicate", 1))
                     continue
             rungs[P] = LadderRung(P, _rung_payload(
                 config, plan, hier, schedule, decisions, snapshot))
@@ -161,6 +168,7 @@ class SpmmSession:
         if skipped:
             session.events.append({"action": "budget_skip",
                                    "skipped": dict(skipped),
+                                   "replicate": dict(skipped_replicate),
                                    "budget": int(budget)})
         return session
 

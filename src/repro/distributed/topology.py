@@ -289,6 +289,21 @@ class Topology:
         return _compat_make_mesh((G, L), ("g", "l"),
                                  devices=list(self.devices)), "g", "l"
 
+    def replicated_mesh(self, c: int, s: int) -> Tuple[Mesh, str, str]:
+        """A (c, s) replica × shard mesh over the devices.
+
+        Lane-major: lane r is the contiguous device range
+        [r·s, (r+1)·s) — the fast tier once s fits one group — while the
+        replica axis strides s, so the reduce-scatter spans the slow
+        inter-group links first (the two-tier argument applied to
+        replication).
+        """
+        if self.P != c * s:
+            raise TopologyError(
+                f"topology has {self.P} devices, need c*s={c * s}")
+        return _compat_make_mesh((c, s), ("r", "x"),
+                                 devices=list(self.devices)), "r", "x"
+
     # ----- data placement ----------------------------------------------
 
     def put_global(self, b, sharding):
