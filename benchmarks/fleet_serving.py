@@ -1,0 +1,117 @@
+"""Multi-tenant fleet serving: placement scores + rebalance migrations.
+
+Two scenarios over ``Topology.local(8)``:
+
+  ``trio``  — the pinned imbalanced start (two heavy power-law tenants
+              whose fingerprint tie-breaks land on one 4-device group,
+              one light tenant on the other); ``rebalance()`` must
+              migrate exactly one heavy tenant and serving must finish
+              with ``dropped_waves == 0``.
+  ``cross`` — one tenant migrated between UNEQUAL groups (4 vs 2
+              devices), so the resident B/C slabs cross real
+              ``ReshardSpec`` routes (moved rows > 0).
+
+Every admit row carries the placement's ``modeled_time`` (the α-β score
+the fleet chose by — deterministic, gated) and the rebalance rows carry
+``migrations`` (gated: a fleet that starts migrating MORE than baseline
+has a placement-policy regression). Wall times track the host-side
+planning cost and are not gated.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core.api import SpmmConfig
+from repro.core.sparse import power_law_sparse
+from repro.distributed.topology import Topology
+from repro.serving.fleet import SpmmFleet
+
+from .common import fmt_row
+
+# the β (volume) term needs a real dense width to differentiate heavy
+# and light patterns; at tiny hints every placement is α-dominated
+FLEET_CFG = SpmmConfig(n_dense_hint=4096)
+SMOKE_SCENARIOS = ("trio",)  # the CI smoke subset
+
+
+def _trio_rows() -> list:
+    rows = []
+    fleet = SpmmFleet(Topology.local(8), group_sizes=(4, 4),
+                      config=FLEET_CFG, rebalance_threshold=0.25)
+    patterns = {
+        "heavy-a": power_law_sparse(512, 512, 16000, 1.2, seed=0),
+        "heavy-b": power_law_sparse(512, 512, 16000, 1.2, seed=3),
+        "light": power_law_sparse(64, 64, 300, 1.2, seed=0),
+    }
+    for name, a in patterns.items():
+        t0 = time.perf_counter()
+        gi = fleet.admit(name, a)
+        us = (time.perf_counter() - t0) * 1e6
+        t_model, est = fleet.tenants[name].scores[gi]
+        rows.append(fmt_row(
+            f"fleet/trio/admit-{name}", us,
+            f"modeled_time={t_model:.3e};group={gi};est_bytes={est}"))
+
+    rng = np.random.default_rng(0)
+    for name, a in patterns.items():
+        fleet.submit(name, rng.standard_normal(
+            (a.shape[1], 8)).astype(np.float32))
+    fleet.serve()
+
+    imb_before = fleet.imbalance()
+    t0 = time.perf_counter()
+    moves = fleet.rebalance()
+    us = (time.perf_counter() - t0) * 1e6
+    fleet.serve()
+    stats = fleet.stats()
+    dropped = sum(t["server"]["dropped_waves"]
+                  for t in stats["tenants"].values())
+    rows.append(fmt_row(
+        "fleet/trio/rebalance", us,
+        f"migrations={len(moves)};imbalance_before={imb_before:.3f};"
+        f"imbalance_after={fleet.imbalance():.3f};"
+        f"threshold={fleet.threshold};dropped_waves={dropped}"))
+    return rows
+
+
+def _cross_rows() -> list:
+    rows = []
+    fleet = SpmmFleet(Topology.local(8), group_sizes=(4, 2),
+                      config=FLEET_CFG)
+    a = power_law_sparse(512, 512, 16000, 1.2, seed=0)
+    gi = fleet.admit("solo", a, p_ladder=(2, 4))
+    rng = np.random.default_rng(1)
+    fleet.submit("solo", rng.standard_normal((512, 8)).astype(np.float32))
+    fleet.serve()
+
+    dst = 1 - gi
+    t0 = time.perf_counter()
+    ok = fleet.migrate("solo", dst)
+    us = (time.perf_counter() - t0) * 1e6
+    assert ok, "cross-size migration must commit"
+    move = next(e for e in reversed(fleet.events)
+                if e["action"] == "migrate")
+    fleet.submit("solo", rng.standard_normal((512, 8)).astype(np.float32))
+    fleet.serve()
+    dropped = fleet.tenants["solo"].server.stats.dropped_waves
+    rows.append(fmt_row(
+        "fleet/cross/migrate", us,
+        f"migrations={fleet.migrations};from={gi};to={dst};"
+        f"b_rows_moved={move['b_rows']};c_rows_moved={move['c_rows']};"
+        f"dropped_waves={dropped}"))
+    return rows
+
+
+def run(scenarios=None) -> list:
+    if scenarios is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+        scenarios = SMOKE_SCENARIOS if smoke else ("trio", "cross")
+    rows = []
+    if "trio" in scenarios:
+        rows += _trio_rows()
+    if "cross" in scenarios:
+        rows += _cross_rows()
+    return rows

@@ -16,6 +16,7 @@ Prints ``name,us_per_call,derived`` CSV. Figures covered:
   extra   SHIRO MoE dispatch (beyond-paper) (moe_dispatch)
   extra   bucketed-schedule padding sweep   (sched_buckets)
   extra   fused GAT attention (SDDMM+SpMM)  (gat_attention)
+  extra   multi-tenant fleet placement      (fleet_serving)
 
 Flags:
   --only MODULE   run a subset (repeatable; short names, e.g.
@@ -70,9 +71,11 @@ EXIT_CRASHED = 2
 # the running version (see compare_records). crossover_p is the modeled
 # 1.5D scaling crossover (fig7_scaling): a LARGER value means the
 # replicated tier stopped winning until later (or at all) — a strategy
-# regression, gated like the others.
+# regression, gated like the others. migrations (fleet_serving) counts
+# rebalance moves for a pinned tenant set: a fleet migrating MORE than
+# baseline means the placement policy stopped landing tenants well.
 GATE_FIELDS = ("padded_rows", "modeled_time", "total_allocation_size",
-               "crossover_p")
+               "crossover_p", "migrations")
 
 
 def _jax_version() -> str:
@@ -194,11 +197,11 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from . import (fig5_patterns, fig7_scaling, fig8_volume, fig9_balance,
-                   fig10_ablation, fig11_ncols, table3_gnn, gat_attention,
-                   moe_dispatch, overlap_sweep, sched_buckets)
+                   fig10_ablation, fig11_ncols, fleet_serving, gat_attention,
+                   moe_dispatch, overlap_sweep, sched_buckets, table3_gnn)
     modules = [fig5_patterns, fig7_scaling, fig8_volume, fig9_balance,
                fig10_ablation, fig11_ncols, table3_gnn, moe_dispatch,
-               sched_buckets, overlap_sweep, gat_attention]
+               sched_buckets, overlap_sweep, gat_attention, fleet_serving]
     if args.only:
         short = {m.__name__.rsplit(".", 1)[-1]: m for m in modules}
         unknown = [o for o in args.only if o not in short]

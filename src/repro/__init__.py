@@ -15,8 +15,8 @@ paper-branded alias lives in the sibling ``shiro`` package
 __version__ = "0.7.0"  # stamped into autotune cache keys (core.autotune)
 
 __all__ = ["SpmmConfig", "DistSpmm", "compile_spmm", "compile_sddmm",
-           "compile_fused", "SpmmSession", "Topology", "FaultPlan",
-           "NumericalFault"]
+           "compile_fused", "SpmmSession", "SpmmFleet", "ReshardSpec",
+           "Topology", "FaultPlan", "NumericalFault"]
 
 _HOMES = {
     "SpmmConfig": "core.api",
@@ -25,6 +25,8 @@ _HOMES = {
     "compile_sddmm": "core.api",
     "compile_fused": "core.api",
     "SpmmSession": "core.session",
+    "SpmmFleet": "serving.fleet",
+    "ReshardSpec": "serving.fleet",
     "Topology": "distributed.topology",
     "FaultPlan": "robustness",
     "NumericalFault": "robustness",

@@ -61,6 +61,7 @@ __all__ = [
     "unregister_profile_hook",
     "estimate_device_bytes",
     "rung_device_bytes",
+    "decision_modeled_time",
 ]
 
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
@@ -479,3 +480,22 @@ def rung_device_bytes(plan, schedule, decisions, config) -> int:
     if rec:
         return int(rec)
     return estimate_device_bytes(plan, schedule, config)
+
+
+def decision_modeled_time(decisions) -> float:
+    """The α-β modeled time of the execution path a plan actually took.
+
+    ``_plan_and_tune`` records a modeled time per candidate it swept;
+    this picks the one matching the decisions that won — replicated
+    rungs report the replica estimate, overlapped bucketed schedules the
+    overlap estimate, everything else the staged estimate. The single
+    scalar the fleet placement policy ranks candidate groups by.
+    """
+    d = decisions or {}
+    if d.get("replicate", 1) != 1 and "modeled_time_replicated" in d:
+        return float(d["modeled_time_replicated"])
+    if d.get("overlap") and "modeled_time_overlap" in d:
+        return float(d["modeled_time_overlap"])
+    if "modeled_time_staged" in d:
+        return float(d["modeled_time_staged"])
+    return float(d.get("modeled_time_flat", 0.0))

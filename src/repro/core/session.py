@@ -48,11 +48,24 @@ from .api import (
 )
 from .sparse import CSRMatrix, PatternSnapshot, pattern_snapshot
 
-__all__ = ["SpmmSession", "LadderRung"]
+__all__ = ["SpmmSession", "LadderRung", "StagedTopology"]
 
 _SESSION_FORMAT = "shiro.SpmmSession"
 _SESSION_VERSION = 1
 _KNOWN_SESSION_VERSIONS = (1,)
+
+
+@dataclasses.dataclass
+class StagedTopology:
+    """A fully-warmed migration target from ``SpmmSession.stage_topology``.
+
+    Carries everything ``commit_topology`` needs to take over serving in
+    one reference assignment; discarding it (migration abort/rollback)
+    leaves the session untouched."""
+
+    topology: Topology
+    P: int
+    rung: "LadderRung"
 
 
 @dataclasses.dataclass
@@ -206,8 +219,15 @@ class SpmmSession:
             return self.topology
         if P < self.topology.P:
             return self.topology.narrow(P)
-        if self.topology.kind == "local":
+        if self.topology.kind == "local" and self.topology.group is None:
             return Topology.local(P)  # grow: friendly error if absent
+        if self.topology.group is not None:
+            raise TopologyError(
+                f"rung P={P} exceeds the session's sub-topology group "
+                f"(span={self.topology.group}, P={self.topology.P}); a "
+                f"grouped session must not escape onto the wider fleet — "
+                f"migrate it to a larger group (stage_topology/"
+                f"adopt_topology) instead")
         raise TopologyError(
             f"rung P={P} exceeds the session topology "
             f"(P={self.topology.P}, kind={self.topology.kind}); pass the "
@@ -351,6 +371,75 @@ class SpmmSession:
                 new_rung.handle.warm_from(old.handle)
                 self.swaps += 1
         self._rungs[P] = new_rung  # the atomic swap: one assignment
+
+    # ----- migration (fleet placement) ---------------------------------
+
+    def stage_topology(self, where: Union[Topology, Mesh, int, None]
+                       ) -> "StagedTopology":
+        """Prepare serving on another substrate WITHOUT mutating state.
+
+        Phase one of the migration primitive: select the nearest ladder
+        rung for the target topology, re-plan host-side only if that
+        rung predates the live pattern generation (a rung left behind by
+        ``replan(rungs="current")``), materialize device state on the
+        TARGET devices, and pre-lower the currently serving handle's
+        executable working set there (``DistSpmm.warm_from``). The
+        session keeps serving from its current topology throughout, and
+        nothing here touches ``self`` — a failure anywhere in staging
+        (including an injected ``fleet_migrate_fail``) rolls back by
+        simply discarding the returned object. ``commit_topology`` is
+        the separate, infallible reference swap.
+        """
+        topo = Topology.resolve(where)
+        rung_P = self._nearest_rung(self.ladder, topo.P)
+        if rung_P is None:
+            raise TopologyError(
+                f"no ladder rung fits the target topology (P={topo.P}, "
+                f"ladder={self.ladder}); stage onto a group with >= "
+                f"{min(self.ladder)} device(s)")
+        src = self._rungs[rung_P]
+        if src.generation != self.generation:
+            if self._operand is None:
+                raise ValueError(
+                    "session has no operand matrix to replan the staged "
+                    "rung from (loaded with include_operand=False)")
+            plan, hier, schedule, decisions = _plan_and_tune(
+                self._operand, rung_P, self.config, topo)
+            payload = _rung_payload(self.config, plan, hier, schedule,
+                                    decisions, self.snapshot)
+        else:
+            payload = src.payload  # reuse: staging never re-runs MWVC
+        staged = LadderRung(rung_P, payload, generation=self.generation)
+        staged.handle = materialize_payload(
+            payload, topo if topo.P == rung_P else topo.narrow(rung_P),
+            source=f"<staged rung P={rung_P}>")
+        cur = self._rungs.get(self.current_P)
+        if cur is not None and cur.handle is not None:
+            staged.handle.warm_from(cur.handle)
+        return StagedTopology(topology=topo, P=rung_P, rung=staged)
+
+    def commit_topology(self, staged: "StagedTopology") -> DistSpmm:
+        """Adopt a staged substrate: one reference swap, serving-safe.
+
+        Holders of the outgoing handle keep a fully working handle on
+        the old devices until they re-resolve (the hot-swap contract);
+        every other cached handle is dropped as stale — those rungs
+        re-materialize lazily on the new substrate.
+        """
+        for rung in self._rungs.values():
+            rung.handle = None
+        self.topology = staged.topology
+        self._rungs[staged.P] = staged.rung
+        self.current_P = staged.P
+        self.swaps += 1
+        self.events.append({"action": "adopt_topology", "P": staged.P,
+                            "topology": staged.topology.describe()})
+        return staged.rung.handle
+
+    def adopt_topology(self, where: Union[Topology, Mesh, int, None]
+                       ) -> DistSpmm:
+        """``stage_topology`` + ``commit_topology`` in one call."""
+        return self.commit_topology(self.stage_topology(where))
 
     # ----- elastic -----------------------------------------------------
 

@@ -87,6 +87,10 @@ class Topology:
     n_hosts: int = 1
     process_index: int = 0
     local_device_count: Optional[int] = None
+    # a sub-topology carved out of a parent substrate carries its
+    # absolute (start, stop) device span — it names a GROUP, not the
+    # whole fleet, so the elastic grow path must not silently escape it
+    group: Optional[Tuple[int, int]] = None
     _mesh: Optional[Mesh] = dataclasses.field(default=None, repr=False,
                                               compare=False)
 
@@ -151,23 +155,43 @@ class Topology:
                    local_device_count=local)
 
     @classmethod
-    def resolve(cls, where: Union["Topology", Mesh, int, None]
-                ) -> "Topology":
+    def resolve(cls, where: Union["Topology", Mesh, int, None],
+                expect_p: Optional[int] = None) -> "Topology":
         """Normalize every accepted substrate spelling to a Topology.
 
         ``Topology`` passes through; a ``Mesh`` adopts its devices and
         shape; an int P takes the first P local devices; ``None`` takes
         every local device.
+
+        ``expect_p``: when the caller already knows the device count the
+        plan requires, pass it here — a mismatch raises an actionable
+        ``TopologyError`` naming the expected vs resolved counts (and,
+        for a mesh, its shape) instead of whatever shard_map / exec-array
+        shape error would fire downstream.
         """
         if isinstance(where, Topology):
-            return where
-        if isinstance(where, Mesh):
-            return cls.from_mesh(where)
-        if where is None or isinstance(where, (int, np.integer)):
-            return cls.local(None if where is None else int(where))
-        raise TypeError(
-            f"cannot resolve a Topology from {type(where).__name__!r}; "
-            f"pass a Topology, a jax.sharding.Mesh, an int P, or None")
+            topo = where
+        elif isinstance(where, Mesh):
+            topo = cls.from_mesh(where)
+        elif where is None or isinstance(where, (int, np.integer)):
+            topo = cls.local(None if where is None else int(where))
+        else:
+            raise TypeError(
+                f"cannot resolve a Topology from {type(where).__name__!r}; "
+                f"pass a Topology, a jax.sharding.Mesh, an int P, or None")
+        if expect_p is not None and topo.P != int(expect_p):
+            want = int(expect_p)
+            given = (f"mesh of shape "
+                     f"{tuple(np.asarray(where.devices).shape)} with "
+                     f"{topo.P} device(s)" if isinstance(where, Mesh)
+                     else f"{topo.kind!r} topology with {topo.P} device(s)")
+            raise TopologyError(
+                f"this plan needs a topology with exactly {want} "
+                f"device(s), but the given {given} was resolved; accepted "
+                f"coercions: a Topology or jax.sharding.Mesh over {want} "
+                f"devices (any axis layout), the int {want}, or None when "
+                f"this process has >= {want} local devices")
+        return topo
 
     # ----- structure ---------------------------------------------------
 
@@ -195,6 +219,52 @@ class Topology:
                 f"(Topology.local / Topology.multiprocess)")
         return dataclasses.replace(self, devices=self.devices[:P],
                                    tiers=None, _mesh=None)
+
+    def subtopology(self, device_slice: slice) -> "Topology":
+        """A same-kind topology over a contiguous device span.
+
+        The fleet-carving primitive: the result names a GROUP of the
+        parent substrate — ``group`` records the absolute (start, stop)
+        span so sessions placed on it cannot silently escape back onto
+        the full fleet, and structure-derived properties (``network()``,
+        ``fingerprint()``) are those of the carved span, not the parent.
+        """
+        start, stop, step = device_slice.indices(self.P)
+        if step != 1:
+            raise TopologyError(
+                f"subtopology needs a contiguous device span, got "
+                f"step={step}; carve with slice(start, stop)")
+        if stop - start < 1:
+            raise TopologyError(
+                f"subtopology span [{start}:{stop}] of a {self.P}-device "
+                f"topology is empty")
+        base = self.group[0] if self.group is not None else 0
+        return dataclasses.replace(
+            self, devices=self.devices[start:stop], tiers=None, _mesh=None,
+            group=(base + start, base + stop))
+
+    def split(self, sizes: Tuple[int, ...]) -> Tuple["Topology", ...]:
+        """Carve the substrate into disjoint contiguous sub-topologies.
+
+        ``sizes`` are the per-group device counts, in device order; they
+        must each be >= 1 and sum to at most P (a trailing remainder of
+        the fleet is simply left uncarved).
+        """
+        sizes = tuple(int(s) for s in sizes)
+        if not sizes:
+            raise TopologyError("split needs at least one group size")
+        if any(s < 1 for s in sizes):
+            raise TopologyError(f"split sizes must each be >= 1, got {sizes}")
+        if sum(sizes) > self.P:
+            raise TopologyError(
+                f"split sizes {sizes} sum to {sum(sizes)}, but the "
+                f"topology has only {self.P} devices")
+        groups = []
+        off = 0
+        for s in sizes:
+            groups.append(self.subtopology(slice(off, off + s)))
+            off += s
+        return tuple(groups)
 
     def auto_grouping(self, net) -> Optional[Tuple[int, int]]:
         """The (G, L) grouping ``hier="auto"`` evaluates.
@@ -242,13 +312,18 @@ class Topology:
 
     def describe(self) -> dict:
         """Stable summary for ``h.stats()`` / BENCH records."""
-        return {
+        d = {
             "kind": self.kind,
             "P": self.P,
             "tiers": self.tiers,
             "n_hosts": self.n_hosts,
             "platform": getattr(self.devices[0], "platform", "unknown"),
         }
+        # only when carved: whole-fleet describe()/fingerprint() stay
+        # byte-stable with pre-fleet releases (autotune cache keys)
+        if self.group is not None:
+            d["group"] = self.group
+        return d
 
     def fingerprint(self) -> str:
         """Stable identity of the execution substrate (autotune cache key).

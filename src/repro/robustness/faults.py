@@ -21,9 +21,13 @@ Fault kinds and the sites that honor them:
   ``collective_delay``  sleeps ``delay`` seconds at the site (``wave``
                         in ``SpmmWaveServer``, worker stages in
                         multiprocess) — a slow link / straggler.
-  ``wave_error``        raises ``InjectedFault`` at the site (``wave``)
-                        — a transient execution failure the retry path
-                        must absorb.
+  ``wave_error``        raises ``InjectedFault`` at the site (``wave``
+                        in ``SpmmWaveServer`` — a transient execution
+                        failure the retry path must absorb; or
+                        ``fleet_migrate_fail`` in ``SpmmFleet.migrate``,
+                        between stage and commit — the migration must
+                        roll back to the source group without dropping
+                        a wave).
   ``autotune_corrupt``  corrupts the just-written autotune cache entry
                         (site ``autotune_cache``; ``mode`` picks
                         zero-byte / truncated / garbage bytes) — a torn

@@ -112,7 +112,8 @@ class SpmmWaveServer:
     """
 
     def __init__(self, source, max_batch: int = 8, max_retries: int = 2,
-                 backoff: float = 0.05, degrade: bool = True):
+                 backoff: float = 0.05, degrade: bool = True,
+                 max_events: int = 256):
         self.source = source
         self.max_batch = max_batch
         self.max_retries = int(max_retries)
@@ -120,8 +121,16 @@ class SpmmWaveServer:
         self.degrade = bool(degrade)
         self.queue: Deque[SpmmRequest] = deque()
         self.stats = SpmmWaveStats()
-        self.events: list = []
+        # a long-lived server must not grow without bound: the ring
+        # keeps the newest ``max_events`` for inspection while
+        # ``events_total`` stays monotonic for assertions/telemetry
+        self.events: Deque[dict] = deque(maxlen=int(max_events))
+        self.events_total = 0
         self._last_handle_id: Optional[int] = None
+
+    def _event(self, event: dict) -> None:
+        self.events.append(event)
+        self.events_total += 1
 
     def _resolve_handle(self):
         if callable(getattr(self.source, "handle", None)):
@@ -146,8 +155,8 @@ class SpmmWaveServer:
             return False
         s.on_resize(max(lower))
         self.stats.degraded_rungs += 1
-        self.events.append({"action": "degrade", "from": current,
-                            "to": max(lower)})
+        self._event({"action": "degrade", "from": current,
+                     "to": max(lower)})
         return True
 
     def submit(self, req: SpmmRequest) -> None:
@@ -178,7 +187,7 @@ class SpmmWaveServer:
                         req.output = None
                         req.wave = None
                     self.stats.failed_waves += 1
-                    self.events.append(
+                    self._event(
                         {"action": "wave_failed", "wave": self.stats.waves,
                          "attempt": attempts,
                          "error": f"{type(e).__name__}: {e}"})
@@ -189,8 +198,8 @@ class SpmmWaveServer:
                         for req in reversed(wave):
                             self.queue.appendleft(req)
                         self.stats.dropped_waves += 1
-                        self.events.append({"action": "wave_dropped",
-                                            "wave": self.stats.waves})
+                        self._event({"action": "wave_dropped",
+                                     "wave": self.stats.waves})
                         raise
                     attempts += 1
                     if self.backoff > 0.0:

@@ -20,6 +20,7 @@ from repro.core.api import (  # noqa: F401
 from repro.core.session import SpmmSession  # noqa: F401
 from repro.distributed.topology import Topology, TopologyError  # noqa: F401
 from repro.robustness import FaultPlan, NumericalFault  # noqa: F401
+from repro.serving.fleet import ReshardSpec, SpmmFleet  # noqa: F401
 
 compile = compile_spmm  # noqa: A001 — the intended public spelling
 
@@ -27,7 +28,9 @@ __all__ = [
     "DistSpmm",
     "FaultPlan",
     "NumericalFault",
+    "ReshardSpec",
     "SpmmConfig",
+    "SpmmFleet",
     "SpmmSession",
     "Topology",
     "TopologyError",
